@@ -1,0 +1,29 @@
+"""§7 closeness: exact closeness centrality throughput (single process),
+the container-scale stand-in for the paper's 100-GPU com-Friendster run."""
+from __future__ import annotations
+
+from repro.core import pipeline
+
+from benchmarks import common
+
+
+def rows():
+    out = []
+    for name in ["social (com-friendster)", "road (GAP-road)"]:
+        g = common.load(name)
+        bl = pipeline.Blest.preprocess(g, use_pallas=False)
+        t = common.timed(lambda: bl.closeness(kappa=64), iters=1)
+        out.append({"graph": name, "n": g.n, "m": g.m, "seconds": t,
+                    "bfs_per_s": g.n / t})
+    return out
+
+
+def main():
+    for r in rows():
+        print(common.csv_row(
+            f"closeness/{r['graph'].split()[0]}", r["seconds"] * 1e6,
+            f"n {r['n']} m {r['m']} {r['bfs_per_s']:.0f} BFS/s"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Shared benchmark utilities.
+
+Benchmarks run on CPU with the pure-XLA kernel path (``use_pallas=False``):
+Pallas interpret mode executes kernel bodies per grid step in Python, so its
+wall-times are meaningless; the kernels' correctness is covered by
+tests/test_kernels.py, and their TPU cost model by the §Roofline analysis.
+Wall-times here compare *algorithmic* variants (the paper's ablations) under
+identical backends, which is the hardware-independent part of Tables 2/4/6.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.bvss import build_bvss
+from repro.core import blest
+from repro.data import graphs
+
+BENCH_SCALE = 10  # 1k-vertex graphs: CI-sized stand-ins for the families
+SOURCES = 8       # paper uses 64 random sources; scaled for the container
+
+
+# paper graph -> (family generator, scale) stand-ins
+GRAPH_FAMILIES = {
+    "kron (GAP-kron)": ("kron", BENCH_SCALE),
+    "urand (GAP-urand)": ("urand", BENCH_SCALE),
+    "road (GAP-road)": ("road", BENCH_SCALE + 2),
+    "osm (europe_osm)": ("road", BENCH_SCALE + 3),
+    "delaunay (delaunay_n24)": ("delaunay", BENCH_SCALE + 2),
+    "rgg (rgg_n_2_24)": ("rgg", BENCH_SCALE + 2),
+    "social (com-friendster)": ("social", BENCH_SCALE),
+}
+
+
+def load(name: str):
+    fam, scale = GRAPH_FAMILIES[name]
+    return graphs.make(fam, scale=scale, seed=1)
+
+
+def sources_for(g, k: int = SOURCES, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    # prefer sources with out-degree > 0 so runs aren't trivially empty
+    deg = g.out_degree
+    cands = np.nonzero(deg > 0)[0]
+    return rng.choice(cands, size=min(k, len(cands)), replace=False)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) after warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

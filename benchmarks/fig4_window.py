@@ -1,0 +1,41 @@
+"""Fig. 4: JaccardWithWindows window-size sweep — compression ratio and BFS
+runtime vs W (expects concave-down improvement with diminishing returns)."""
+from __future__ import annotations
+
+from repro.core import blest, reorder
+from repro.core.bvss import build_bvss
+
+from benchmarks import common
+
+WINDOWS = [8, 32, 128, 512, 2048]
+
+
+def rows(windows=WINDOWS):
+    g = common.load("kron (GAP-kron)")
+    srcs = common.sources_for(g, k=4)
+    out = []
+    for w in windows:
+        perm = reorder.jaccard_with_windows(g, window=w)
+        b = build_bvss(g.permuted(perm))
+        runner = blest.FusedBfs(blest.to_device(b), use_pallas=False)
+
+        def run():
+            for s in srcs:
+                runner(int(perm[s]))
+
+        out.append({"window": w,
+                    "compression": b.compression_ratio,
+                    "num_slices": b.num_slices,
+                    "bfs_ms": common.timed(run) / len(srcs) * 1e3})
+    return out
+
+
+def main():
+    for r in rows():
+        print(common.csv_row(
+            f"fig4/W={r['window']}", r["bfs_ms"] * 1e3,
+            f"compression {r['compression']:.4f} slices {r['num_slices']}"))
+
+
+if __name__ == "__main__":
+    main()

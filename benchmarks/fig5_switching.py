@@ -1,0 +1,36 @@
+"""Fig. 5: per-level switching analysis — Top-Down / Bottom-Up / BLEST
+policy / Optimal oracle, with misclassification rate, on the lowest-
+pseudo-diameter graphs."""
+from __future__ import annotations
+
+from repro.core import blest, switching
+from repro.core.bvss import build_bvss
+
+from benchmarks import common
+
+GRAPHS = ["kron (GAP-kron)", "urand (GAP-urand)", "social (com-friendster)"]
+
+
+def rows(graph_names=GRAPHS):
+    out = []
+    for name in graph_names:
+        g = common.load(name)
+        bd = blest.to_device(build_bvss(g))
+        a = switching.per_level_analysis(bd, int(common.sources_for(g, 1)[0]))
+        out.append({"graph": name,
+                    "levels": len(a["rows"]),
+                    "misclassification": a["misclassification_rate"],
+                    "optimal_speedup": a["speedup_optimal_over_blest"]})
+    return out
+
+
+def main():
+    for r in rows():
+        print(common.csv_row(
+            f"fig5/{r['graph'].split()[0]}", 0.0,
+            f"levels {r['levels']} misclass {r['misclassification']:.2f} "
+            f"optimal/blest {r['optimal_speedup']:.2f}x"))
+
+
+if __name__ == "__main__":
+    main()

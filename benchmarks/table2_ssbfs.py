@@ -1,0 +1,76 @@
+"""Table 2: single-source BFS — BLEST vs the reimplemented baselines.
+
+Baselines (self-contained reimplementations, DESIGN.md §1):
+  gap        — level-synchronous CPU BFS (GAP-like)
+  gap-diropt — Beamer direction-optimizing CPU BFS
+  brs        — BerryBees-like BRS (frontier-oblivious slice sets, unpacked
+               16-MMA-style layout, eager updates)
+  blest      — full pipeline (auto reorder + dispatch + fused driver)
+Speedups are normalized to brs (the [15] analogue), as in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import blest, brs_baseline, pipeline, ref_bfs
+from repro.core.bvss import build_bvss
+
+from benchmarks import common
+
+
+def rows(graph_names=None):
+    out = []
+    for name in graph_names or common.GRAPH_FAMILIES:
+        g = common.load(name)
+        srcs = common.sources_for(g)
+        bl = pipeline.Blest.preprocess(g, use_pallas=False)
+        brs = brs_baseline.build_brs(build_bvss(g))
+        fused = blest.FusedBfs(bl.bd, lazy=bl.stats.lazy, use_pallas=False)
+
+        def run_blest():
+            for s in srcs:
+                fused(int(bl.perm[s]))
+
+        def run_brs():
+            for s in srcs:
+                brs_baseline.bfs_brs(brs, int(s))
+
+        def run_gap():
+            for s in srcs:
+                ref_bfs.bfs_levels(g, int(s))
+
+        def run_diropt():
+            for s in srcs:
+                ref_bfs.bfs_levels_direction_optimizing(g, int(s))
+
+        t_blest = common.timed(run_blest) / len(srcs)
+        t_brs = common.timed(run_brs) / len(srcs)
+        t_gap = common.timed(run_gap, iters=1) / len(srcs)
+        t_diropt = common.timed(run_diropt, iters=1) / len(srcs)
+        out.append({
+            "graph": name,
+            "n": g.n, "m": g.m,
+            "gap_ms": t_gap * 1e3,
+            "gap_diropt_ms": t_diropt * 1e3,
+            "brs_ms": t_brs * 1e3,
+            "blest_ms": t_blest * 1e3,
+            "speedup_vs_brs": t_brs / t_blest,
+            "brs_imbalance": brs_baseline.work_metrics(brs)[
+                "imbalance_factor"],
+        })
+    return out
+
+
+def main():
+    rs = rows()
+    for r in rs:
+        print(common.csv_row(
+            f"table2/{r['graph'].split()[0]}", r["blest_ms"] * 1e3,
+            f"vs_brs {r['speedup_vs_brs']:.2f}x "
+            f"gap {r['gap_ms']:.1f}ms brs {r['brs_ms']:.1f}ms"))
+    geo = float(np.exp(np.mean([np.log(r["speedup_vs_brs"]) for r in rs])))
+    print(common.csv_row("table2/geomean_speedup_vs_brs", 0.0, f"{geo:.2f}x"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Table 7: preprocessing overhead — CSC build, reordering
+(JaccardWithWindows or RCM per the dispatch), BVSS construction."""
+from __future__ import annotations
+
+from repro.core import pipeline
+
+from benchmarks import common
+
+
+def rows(graph_names=None):
+    out = []
+    for name in graph_names or common.GRAPH_FAMILIES:
+        g = common.load(name)
+        bl = pipeline.Blest.preprocess(g)
+        s = bl.stats
+        out.append({"graph": name, "ord": s.algorithm,
+                    "csc_s": s.csc_s, "reorder_s": s.reorder_s,
+                    "bvss_s": s.bvss_s,
+                    "compression": s.compression_ratio, "u_div": s.u_div})
+    return out
+
+
+def main():
+    for r in rows():
+        print(common.csv_row(
+            f"table7/{r['graph'].split()[0]}",
+            (r["csc_s"] + r["reorder_s"] + r["bvss_s"]) * 1e6,
+            f"{r['ord']} csc {r['csc_s']:.3f}s reord {r['reorder_s']:.3f}s "
+            f"bvss {r['bvss_s']:.3f}s compr {r['compression']:.3f}"))
+
+
+if __name__ == "__main__":
+    main()

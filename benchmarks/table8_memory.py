@@ -1,0 +1,59 @@
+"""Table 8: memory footprint — BVSS arrays, frontier/visited (byte-plane and
+packed), queues, level arrays for the MS-BFS workload (kappa sources), plus
+the full-scale blest-bfs dry-run config analytically."""
+from __future__ import annotations
+
+from repro.core import pipeline
+from repro.configs import blest_bfs as B
+
+from benchmarks import common
+
+KAPPA = 256
+
+
+def rows(graph_names=None, kappa=KAPPA):
+    out = []
+    for name in graph_names or list(common.GRAPH_FAMILIES)[:5]:
+        g = common.load(name)
+        bl = pipeline.Blest.preprocess(g)
+        b = bl.bvss
+        fp = b.bytes_footprint
+        n_pad = b.n_pad
+        row = {
+            "graph": name,
+            "bvss_gb": sum(fp.values()) / 1e9,
+            "frontier_byteplane_gb": 2 * n_pad * kappa / 1e9,  # V_curr+V_next
+            "frontier_packed_gb": 2 * n_pad * kappa / 8 / 1e9,
+            "queues_gb": 2 * b.num_vss * 4 / 1e9,
+            "levels_gb": n_pad * kappa * 4 / 1e9,
+            "active_dirty_gb": 2 * b.num_sets * kappa / 8 / 1e9,
+        }
+        row["total_gb"] = sum(v for k, v in row.items()
+                              if k.endswith("_gb") and k != "frontier_packed_gb")
+        out.append(row)
+    # full-scale analytic row (the dry-run workload)
+    n, nv, tau = B.N_VERTICES, B.NUM_VSS, B.TAU
+    out.append({
+        "graph": "blest-bfs (dry-run, analytic)",
+        "bvss_gb": (nv * tau * (1 + 4) + nv * 4) / 1e9,
+        "frontier_byteplane_gb": 2 * n * kappa / 1e9,
+        "frontier_packed_gb": 2 * n * kappa / 8 / 1e9,
+        "queues_gb": 2 * nv * 4 / 1e9,
+        "levels_gb": n * kappa * 4 / 1e9,
+        "active_dirty_gb": 2 * (n // 8) * kappa / 8 / 1e9,
+        "total_gb": (nv * tau * 5 + nv * 4 + 2 * n * kappa + 2 * nv * 4
+                     + n * kappa * 4 + 2 * (n // 8) * kappa / 8) / 1e9,
+    })
+    return out
+
+
+def main():
+    for r in rows():
+        print(common.csv_row(
+            f"table8/{r['graph'].split()[0]}", 0.0,
+            f"bvss {r['bvss_gb']:.3f}GB frontier {r['frontier_byteplane_gb']:.3f}GB "
+            f"levels {r['levels_gb']:.3f}GB total {r['total_gb']:.3f}GB"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""§6.3 extension: triangle counting over the (popc, AND) semiring."""
+from __future__ import annotations
+
+from repro.core import triangles
+
+from benchmarks import common
+
+GRAPHS = ["kron (GAP-kron)", "rgg (rgg_n_2_24)", "social (com-friendster)"]
+
+
+def rows(graph_names=GRAPHS):
+    out = []
+    for name in graph_names:
+        g = common.load(name)
+        t = common.timed(lambda: triangles.triangle_count(g), iters=2)
+        out.append({"graph": name, "triangles": triangles.triangle_count(g),
+                    "seconds": t, "edges_per_s": g.m / t})
+    return out
+
+
+def main():
+    for r in rows():
+        print(common.csv_row(
+            f"triangles/{r['graph'].split()[0]}", r["seconds"] * 1e6,
+            f"count {r['triangles']} {r['edges_per_s']:.0f} edges/s"))
+
+
+if __name__ == "__main__":
+    main()

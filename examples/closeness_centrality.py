@@ -1,0 +1,44 @@
+"""Exact closeness centrality via multi-source BFS (paper §6.2).
+
+    PYTHONPATH=src python examples/closeness_centrality.py
+
+Runs the kappa-way MS-BFS kernel over all sources in batches, prints the
+top-central vertices, and cross-checks against the numpy oracle.  With
+multiple devices (XLA_FLAGS=--xla_force_host_platform_device_count=8) it
+also demonstrates the paper's source-partitioned multi-accelerator mode.
+"""
+import jax
+import numpy as np
+
+from repro.core import distributed, pipeline, ref_bfs
+from repro.data import graphs
+
+
+def main():
+    g = graphs.small_world(1 << 10, k=8, p=0.1, seed=3)
+    bl = pipeline.Blest.preprocess(g, use_pallas=False)
+
+    cc = bl.closeness(kappa=64)
+    want = ref_bfs.closeness_centrality(g)
+    np.testing.assert_allclose(cc, want, rtol=1e-9)
+    top = np.argsort(cc)[::-1][:5]
+    print("top-5 closeness:", [(int(v), round(float(cc[v]), 4))
+                               for v in top])
+
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+        far, reach = distributed.closeness_source_parallel(
+            bl.bd, mesh, ("data",), kappa=32)
+        cc2 = distributed.closeness_from_far(g.n, far, reach)[bl.perm]
+        np.testing.assert_allclose(cc2, want, rtol=1e-9)
+        print(f"source-parallel over {n_dev} devices matches ✓ "
+              "(the paper's 100-GPU partitioning, shard_map edition)")
+    else:
+        print("single device: set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 to demo "
+              "the multi-device source-parallel mode")
+
+
+if __name__ == "__main__":
+    main()

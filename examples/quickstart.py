@@ -1,0 +1,42 @@
+"""Quickstart: BLEST end-to-end on a synthetic scale-free graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a graph, runs the full preprocessing pipeline (classification ->
+reordering -> BVSS -> dispatch), executes a single-source BFS on the fused
+on-device driver, validates it against the CPU oracle, and prints the
+pipeline's decisions.
+"""
+import numpy as np
+
+from repro.core import pipeline, ref_bfs
+from repro.data import graphs
+
+
+def main():
+    g = graphs.rmat(scale=12, edge_factor=16, seed=7)
+    print(f"graph: n={g.n} m={g.m}")
+
+    bl = pipeline.Blest.preprocess(g, use_pallas=False)
+    s = bl.stats
+    print(f"scale-free: {s.scale_free}  reorder: {s.algorithm}  "
+          f"compression: {s.compression_ratio:.3f}  U_div: {s.u_div:.0f}  "
+          f"lazy: {s.lazy}")
+    print(f"preprocess: csc {s.csc_s:.2f}s  reorder {s.reorder_s:.2f}s  "
+          f"bvss {s.bvss_s:.2f}s")
+
+    src = 0
+    levels = bl.bfs(src)                      # fused on-device driver
+    oracle = ref_bfs.bfs_levels(g, src)
+    assert (levels == oracle).all(), "BFS mismatch!"
+    reached = levels[levels < np.iinfo(np.int32).max]
+    print(f"BFS from {src}: reached {reached.size}/{g.n} vertices, "
+          f"depth {reached.max()}")
+
+    levels_b = bl.bfs(src, mode="bucketed")   # frontier-compacted driver
+    assert (levels_b == oracle).all()
+    print("fused and bucketed drivers agree with the CPU oracle ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+on synthetic data with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the same config system, data pipeline, optimizer, and fault-tolerant
+loop as the production launcher (src/repro/launch/train.py); sized for CPU.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+import repro.configs as configs
+from repro.configs.base import ShapeConfig
+from repro.data import synthetic
+from repro.train import optimizer as O
+from repro.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: tinyllama geometry, narrowed (12 x d768 + 32k vocab)
+    cfg = dataclasses.replace(
+        configs.get("tinyllama-1.1b"),
+        n_layers=12, d_model=768, n_heads=12, n_kv=4, d_ff=2048,
+        vocab=32000, head_dim=64, remat="none", attn_block_k=256)
+    print(f"model: {cfg.param_count() / 1e6:.1f}M params")
+
+    shape = ShapeConfig("train_small", seq_len=256, global_batch=8,
+                        kind="train")
+    data = synthetic.DataConfig(seed=0)
+
+    out = train_loop.train(
+        cfg,
+        steps=args.steps,
+        batch_fn=lambda s: jax.tree.map(
+            jax.numpy.asarray, synthetic.batch_for_step(cfg, shape, data, s)),
+        opt_cfg=O.AdamWConfig(lr=3e-4, warmup_steps=20),
+        checkpoint_dir=args.ckpt,
+        checkpoint_every=100,
+        log_every=20,
+    )
+    first, last = out["history"][0], out["history"][-1]
+    print(f"loss: {first['loss']:.3f} (step {first['step']}) -> "
+          f"{last['loss']:.3f} (step {last['step']})")
+    assert last["loss"] < first["loss"], "training did not reduce loss"
+    print("checkpoints in", args.ckpt, "- rerun to resume from the latest")
+
+
+if __name__ == "__main__":
+    main()

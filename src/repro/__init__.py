@@ -1,0 +1,8 @@
+"""repro — BLEST-JAX: Graph traversal on tensor cores, rebuilt as a multi-pod
+JAX/Pallas framework, plus the assigned LM-architecture substrate.
+
+Paper: "Graph Traversal on Tensor Cores: A BFS Framework for Modern GPUs"
+(Elbek & Kaya, CS.DC 2026).
+"""
+
+__version__ = "1.0.0"

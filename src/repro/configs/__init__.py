@@ -1,0 +1,38 @@
+"""Config registry: ``get(name)`` / ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, shape_applicable
+
+_REGISTRY: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        stablelm_3b, stablelm_12b, qwen3_4b, tinyllama_1_1b, musicgen_large,
+        mamba2_370m, zamba2_7b, qwen2_moe_a2_7b, llama4_maverick,
+        internvl2_26b, blest_bfs,
+    )
+
+
+ASSIGNED = [
+    "stablelm-3b", "stablelm-12b", "qwen3-4b", "tinyllama-1.1b",
+    "musicgen-large", "mamba2-370m", "zamba2-7b", "qwen2-moe-a2.7b",
+    "llama4-maverick-400b-a17b", "internvl2-26b",
+]

@@ -1,0 +1,114 @@
+"""BerryBees-like BRS baseline (paper §3 / §8).
+
+BRS = slice sets *without* virtualization: one slice set is one unit of warp
+work regardless of its slice count, dispatched frontier-obliviously.  The two
+deficiencies BLEST fixes are modeled structurally:
+
+  1. inter-warp load imbalance — every slice set is padded to the *maximum*
+     slice count, so the device executes max_slices work per set (what a
+     frontier-oblivious one-set-per-warp schedule costs on skewed degree
+     distributions);
+  2. frontier-oblivious dispatch — all sets are processed every level
+     (no queue), even when their frontier word is zero.
+
+It also emulates the pre-BLEST 16-MMA layout by operating on *unpacked*
+bool masks (8 bool lanes per slice where the optimal layout uses 1 byte),
+an 8x word-count inflation mirroring the 8x MMA-call reduction of §5.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bvss import Bvss
+from repro.core.blest import UNREACHED
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class BrsDevice:
+    n: int
+    n_pad: int
+    n_ext: int
+    num_sets: int
+    max_slices: int
+    sigma: int
+    masks_bits: jax.Array  # (num_sets, max_slices, sigma) uint8 — UNPACKED
+    row_ids: jax.Array     # (num_sets, max_slices) int32
+    padded_work: int       # num_sets * max_slices (the imbalance cost)
+    real_work: int         # actual slice count
+
+
+def build_brs(b: Bvss) -> BrsDevice:
+    """Regroup BVSS slices by parent slice set, padded to the max count."""
+    sigma = b.config.sigma
+    nz = b.masks[: b.num_vss] != 0
+    sets = np.repeat(b.virtual_to_real, b.config.tau).reshape(
+        b.num_vss, b.config.tau)[nz]
+    masks = b.masks[: b.num_vss][nz]
+    rows = b.row_ids[: b.num_vss][nz]
+    counts = np.bincount(sets, minlength=b.num_sets)
+    max_slices = max(int(counts.max(initial=1)), 1)
+    order = np.argsort(sets, kind="stable")
+    sets_s, masks_s, rows_s = sets[order], masks[order], rows[order]
+    starts = np.zeros(b.num_sets + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    pos = np.arange(len(sets_s)) - starts[sets_s]
+    m = np.zeros((b.num_sets, max_slices), np.uint8)
+    r = np.full((b.num_sets, max_slices), b.n_pad, np.int32)
+    m[sets_s, pos] = masks_s
+    r[sets_s, pos] = rows_s
+    bits = ((m[:, :, None] >> np.arange(sigma, dtype=np.uint8)) & 1).astype(
+        np.uint8)
+    return BrsDevice(
+        n=b.n, n_pad=b.n_pad, n_ext=b.n_pad + sigma,
+        num_sets=b.num_sets, max_slices=max_slices, sigma=sigma,
+        masks_bits=jnp.asarray(bits), row_ids=jnp.asarray(r),
+        padded_work=b.num_sets * max_slices, real_work=int(counts.sum()),
+    )
+
+
+def bfs_brs(brs: BrsDevice, src, max_levels: int | None = None) -> jax.Array:
+    """Frontier-oblivious BFS over the BRS structure (the (naive)/[15]-like
+    baseline for Table 2/4).  Eager updates, unpacked masks, no queue."""
+    sigma = brs.sigma
+    max_levels = brs.n_ext if max_levels is None else max_levels
+    src = jnp.asarray(src, jnp.int32)
+    v0 = jnp.zeros(brs.n_ext, jnp.uint8).at[src].set(1)
+    lvl0 = jnp.full(brs.n_ext, UNREACHED, jnp.int32).at[src].set(0)
+    f0 = jnp.zeros((brs.num_sets, sigma), jnp.uint8).at[
+        src // sigma, src % sigma].set(1)
+
+    def cond(carry):
+        v, lvl, f, ell = carry
+        return jnp.logical_and((f != 0).any(), ell <= max_levels)
+
+    def body(carry):
+        v, lvl, f, ell = carry
+        # frontier-oblivious: every slice set multiplied every level
+        marks = jnp.einsum("nms,ns->nm", brs.masks_bits.astype(jnp.int32),
+                           f.astype(jnp.int32)) > 0
+        marks = marks.astype(jnp.uint8)
+        rows = brs.row_ids.ravel()
+        gate = 1 - v[rows]  # eager visited check (Alg. 2 mechanics)
+        v_next = v.at[rows].max(marks.ravel() & gate)
+        diff = v_next & (1 - v)
+        lvl = jnp.where(diff != 0, ell, lvl)
+        f_new = diff[: brs.n_pad].reshape(brs.num_sets, sigma)
+        return v_next, lvl, f_new, ell + 1
+
+    _, lvl, _, _ = jax.lax.while_loop(cond, body, (v0, lvl0, f0, jnp.int32(1)))
+    return lvl[: brs.n]
+
+
+def work_metrics(brs: BrsDevice) -> dict:
+    """Structural cost metrics (hardware-independent Table 2/4 evidence)."""
+    return {
+        "padded_slices_per_level": brs.padded_work,
+        "real_slices": brs.real_work,
+        "imbalance_factor": brs.padded_work / max(brs.real_work, 1),
+        "unpacked_words_per_slice": brs.sigma,  # vs 1 byte in BLEST layout
+    }

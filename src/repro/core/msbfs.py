@@ -1,0 +1,184 @@
+"""Multi-source BFS (paper Alg. 5) — kappa concurrent BFSs per launch.
+
+State layout (DESIGN.md §2, row "kappa-bit packed words"): visited/frontier
+are **byte-planes** ``(n_ext, kappa) uint8`` rather than packed kappa-bit
+words, because XLA's scatter combiners cannot express OR over packed words;
+``scatter-max`` over byte-planes is OR.  The (8, 128)-tiled byte layout plays
+the role of the paper's ``getVI`` re-indexing: 8 consecutive vertices x kappa
+lanes are contiguous, so stage-2 sweeps are fully coalesced by construction
+(see :func:`get_vi` for the fidelity implementation + equivalence test).
+
+The pull is the (popc, AND) GEMM on the MXU (kernels/pull_ms.py): per queued
+VSS, (tau x sigma) unpacked masks @ (sigma x kappa) frontier bit-planes.
+
+activeSets / dirtySets (paper §6.1): in the fused driver both are implicit —
+inactive slice sets contribute all-zero frontier tiles and the dense sweep
+touches every word exactly once.  The bucketed driver exposes ``activeSets``
+as the VSS queue and ``dirtySets`` as a gather list for stage 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blest import BvssDevice, UNREACHED
+from repro.kernels import ops
+
+
+class MsBfsState(NamedTuple):
+    v_curr: jax.Array    # (n_ext, kappa) uint8 — visited bytes
+    f_planes: jax.Array  # (num_sets_ext, sigma, kappa) uint8 — frontier
+    far: jax.Array       # (n_ext,) int32 — per-batch closeness accumulator
+    reach: jax.Array     # (n_ext,) int32 — per-batch visit counts
+    # NOTE: int32 per kappa-batch is safe (<= kappa * diameter); the host-side
+    # closeness driver accumulates across batches in int64.
+    levels: jax.Array    # (n_ext, kappa) int32 or (0,0) if not tracked
+    ell: jax.Array       # int32
+
+
+def init_ms_state(bd: BvssDevice, sources: jax.Array, *,
+                  track_levels: bool = False) -> MsBfsState:
+    kappa = sources.shape[0]
+    cols = jnp.arange(kappa)
+    valid = sources >= 0  # padding sources marked -1
+    safe_src = jnp.where(valid, sources, 0)
+    v = jnp.zeros((bd.n_ext, kappa), jnp.uint8)
+    v = v.at[safe_src, cols].max(valid.astype(jnp.uint8))
+    f = v[: bd.n_pad].reshape(bd.num_sets, bd.sigma, kappa)
+    f = jnp.concatenate(
+        [f, jnp.zeros((1, bd.sigma, kappa), jnp.uint8)], axis=0)
+    if track_levels:
+        levels = jnp.full((bd.n_ext, kappa), UNREACHED, jnp.int32)
+        levels = jnp.where(v == 1, 0, levels)
+    else:
+        levels = jnp.zeros((0, 0), jnp.int32)
+    return MsBfsState(
+        v_curr=v,
+        f_planes=f,
+        far=jnp.zeros(bd.n_ext, jnp.int32),
+        reach=v.sum(axis=1).astype(jnp.int32),
+        levels=levels,
+        ell=jnp.int32(1),
+    )
+
+
+def _ms_level(bd: BvssDevice, state: MsBfsState, *, use_pallas: bool,
+              track_levels: bool) -> MsBfsState:
+    kappa = state.v_curr.shape[1]
+    # Stage 1 — lazy marking via the MXU pull over all VSSs
+    marks = ops.pull_ms(bd.masks, state.f_planes, bd.v2r,
+                        sigma=bd.sigma, use_pallas=use_pallas)
+    v_next = state.v_curr.at[bd.row_ids.ravel()].max(
+        marks.reshape(-1, kappa))
+    # Stage 2 — frontier finalization (dense, fully coalesced)
+    diff = v_next & (1 - state.v_curr)
+    new_per_vertex = diff.sum(axis=1).astype(jnp.int32)
+    far = state.far + state.ell * new_per_vertex
+    reach = state.reach + new_per_vertex
+    f = diff[: bd.n_pad].reshape(bd.num_sets, bd.sigma, kappa)
+    f = jnp.concatenate([f, jnp.zeros((1, bd.sigma, kappa), jnp.uint8)], 0)
+    levels = state.levels
+    if track_levels:
+        levels = jnp.where(diff == 1, state.ell, levels)
+    return MsBfsState(v_next, f, far, reach, levels, state.ell + 1)
+
+
+def msbfs_fused(
+    bd: BvssDevice,
+    sources: jax.Array,
+    *,
+    use_pallas: bool = True,
+    track_levels: bool = False,
+    max_levels: int | None = None,
+) -> MsBfsState:
+    """Run kappa=len(sources) concurrent BFSs to completion on-device."""
+    max_levels = bd.n_ext if max_levels is None else max_levels
+
+    def cond(state: MsBfsState):
+        return jnp.logical_and((state.f_planes != 0).any(),
+                               state.ell <= max_levels)
+
+    def body(state: MsBfsState):
+        return _ms_level(bd, state, use_pallas=use_pallas,
+                         track_levels=track_levels)
+
+    return jax.lax.while_loop(
+        cond, body, init_ms_state(bd, sources, track_levels=track_levels))
+
+
+@dataclasses.dataclass
+class BucketedMsBfs:
+    """Host-driven MS-BFS with activeSets queue + dirtySets stage-2 gather.
+
+    The fused driver's dense stage 2 is the paper's identified bottleneck for
+    small frontiers on high-diameter graphs; dirtySets restrict stage 2 to
+    slice sets actually touched in stage 1 (paper §6.1 last paragraph).
+    """
+
+    bd: BvssDevice
+    use_pallas: bool = True
+    track_levels: bool = False
+
+    def __call__(self, sources: jax.Array, max_levels: int | None = None
+                 ) -> MsBfsState:
+        bd = self.bd
+        state = init_ms_state(bd, sources, track_levels=self.track_levels)
+        real_ptrs = np.asarray(bd.real_ptrs)
+        kappa = int(sources.shape[0])
+        max_levels = bd.n_ext if max_levels is None else max_levels
+
+        @jax.jit
+        def level_fn(state: MsBfsState, qids: jax.Array) -> MsBfsState:
+            masks = bd.masks[qids]
+            rows = bd.row_ids[qids]
+            v2r = bd.v2r[qids]
+            marks = ops.pull_ms(masks, state.f_planes, v2r,
+                                sigma=bd.sigma, use_pallas=self.use_pallas)
+            v_next = state.v_curr.at[rows.ravel()].max(
+                marks.reshape(-1, kappa))
+            diff = v_next & (1 - state.v_curr)
+            new_per_vertex = diff.sum(axis=1).astype(jnp.int32)
+            far = state.far + state.ell * new_per_vertex
+            reach = state.reach + new_per_vertex
+            f = diff[: bd.n_pad].reshape(bd.num_sets, bd.sigma, kappa)
+            f = jnp.concatenate(
+                [f, jnp.zeros((1, bd.sigma, kappa), jnp.uint8)], 0)
+            levels = state.levels
+            if self.track_levels:
+                levels = jnp.where(diff == 1, state.ell, levels)
+            return MsBfsState(v_next, f, far, reach, levels, state.ell + 1)
+
+        while int(state.ell) <= max_levels:
+            # activeSets: slice sets active in >= 1 BFS (paper Alg.5 queue)
+            active = np.asarray(
+                (state.f_planes[: bd.num_sets] != 0).any(axis=(1, 2)))
+            sets = np.nonzero(active)[0]
+            if sets.size == 0:
+                break
+            counts = real_ptrs[sets + 1] - real_ptrs[sets]
+            total = int(counts.sum())
+            if total == 0:
+                break
+            qids = np.repeat(real_ptrs[sets], counts) + (
+                np.arange(total) - np.repeat(np.cumsum(counts) - counts,
+                                             counts))
+            bs = max(8, 1 << (total - 1).bit_length())
+            padded = np.full(bs, bd.num_vss, np.int32)
+            padded[:total] = qids.astype(np.int32)
+            state = level_fn(state, jnp.asarray(padded))
+        return state
+
+
+def get_vi(u: jax.Array, rho: int, sigma: int = 8) -> jax.Array:
+    """Paper §6.1 bijective re-indexing getVI(u, rho) = (u mod sigma)*rho +
+    floor(u/sigma).  On TPU the (8,128) byte-plane tiles already provide the
+    coalescing this remapping buys on GPUs; kept for fidelity + tests."""
+    return (u % sigma) * rho + u // sigma
+
+
+def get_vi_inverse(idx: jax.Array, rho: int, sigma: int = 8) -> jax.Array:
+    return (idx % rho) * sigma + idx // rho

@@ -1,0 +1,114 @@
+"""Switching (paper §5.3 + §2.2) — revisited for TPU.
+
+The paper decouples exploration direction from update mechanics, yielding four
+modes, and adds the compute-unit axis (TC vs CUDA cores).  The TPU-meaningful
+axes (DESIGN.md §3.4):
+
+  unit:       VPU bitwise pull (single-source) | MXU matmul pull (multi-source)
+  scheduling: 'queued'  — frontier-compacted VSS gather, work ~ |Q| * tau
+              'dense'   — full sweep, work ~ N_v * tau (bottom-up analogue)
+  update:     'lazy' (Alg. 3) | 'eager' (Alg. 2), dispatched on U_div > 25000
+
+Eq. (6):  switch to dense/bottom-up when   #unvisited < eta * |Q_curr|.
+
+``decide_mode`` is the per-level policy; ``probe_switching_benefit`` is the
+paper's preprocessing probe (3 BFS runs from random sources with and without
+switching) that decides whether switching is enabled at all for a graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import blest
+
+ETA_DEFAULT = 10.0
+UDIV_LAZY_THRESHOLD = 25_000.0  # paper §7.1 dispatch constant
+
+
+def decide_mode(unvisited: int, queue_len: int, eta: float = ETA_DEFAULT
+                ) -> str:
+    """Eq. (6): 'dense' (bottom-up analogue) vs 'queued' (top-down)."""
+    return "dense" if unvisited < eta * queue_len else "queued"
+
+
+@dataclasses.dataclass
+class SwitchingDecision:
+    enabled: bool
+    time_with: float
+    time_without: float
+
+
+def probe_switching_benefit(
+    bd: blest.BvssDevice,
+    eta: float = ETA_DEFAULT,
+    runs: int = 3,
+    seed: int = 0,
+) -> SwitchingDecision:
+    """Paper §7.1: run ``runs`` BFSs from random sources with and without
+    switching; enable it only if it helps."""
+    rng = np.random.default_rng(seed)
+    sources = rng.integers(0, bd.n, runs)
+    t_with = _timed_runs(blest.BucketedBfs(bd, eta=eta), sources)
+    t_without = _timed_runs(blest.BucketedBfs(bd, eta=None), sources)
+    return SwitchingDecision(
+        enabled=t_with < t_without,
+        time_with=t_with,
+        time_without=t_without,
+    )
+
+
+def _timed_runs(runner, sources) -> float:
+    import jax
+
+    total = 0.0
+    for s in sources:
+        t0 = time.perf_counter()
+        jax.block_until_ready(runner(int(s)))
+        total += time.perf_counter() - t0
+    return total
+
+
+def per_level_analysis(bd: blest.BvssDevice, src: int, eta: float = ETA_DEFAULT
+                       ) -> dict:
+    """Fig. 5 data: per-level times in forced-queued (Top-Down), forced-dense
+    (Bottom-Up), the Eq.(6) policy (BLEST), and the oracle (Optimal =
+    min(TD, BU) per level), plus the misclassification rate."""
+    td = blest.BucketedBfs(bd, eta=None, instrument=True)
+    td(src)
+    td_trace = td.trace
+    bu = blest.BucketedBfs(bd, eta=float("inf"), instrument=True)
+    bu(src)
+    bu_trace = bu.trace
+    pol = blest.BucketedBfs(bd, eta=eta, instrument=True)
+    pol(src)
+    pol_trace = pol.trace
+
+    levels = min(len(td_trace), len(bu_trace), len(pol_trace))
+    rows, mis = [], 0
+    for k in range(levels):
+        t_td = td_trace[k]["time_s"]
+        t_bu = bu_trace[k]["time_s"]
+        opt_mode = "queued" if t_td <= t_bu else "dense"
+        chosen = pol_trace[k]["mode"]
+        if chosen != opt_mode:
+            mis += 1
+        rows.append({
+            "level": k + 1,
+            "top_down_s": t_td,
+            "bottom_up_s": t_bu,
+            "blest_s": pol_trace[k]["time_s"],
+            "blest_mode": chosen,
+            "optimal_mode": opt_mode,
+            "optimal_s": min(t_td, t_bu),
+        })
+    total_blest = sum(r["blest_s"] for r in rows)
+    total_opt = sum(r["optimal_s"] for r in rows)
+    return {
+        "rows": rows,
+        "misclassification_rate": mis / levels if levels else 0.0,
+        "speedup_optimal_over_blest": (
+            total_blest / total_opt if total_opt > 0 else 1.0),
+    }

@@ -1,0 +1,74 @@
+"""Multi-source BFS pull kernel — the (popc, AND) GEMM on the MXU.
+
+For kappa concurrent BFS instances the pull of one VSS is a true matrix
+product: unpack the 128 (tau) sigma-bit masks into a (tau, sigma) int8 tile,
+multiply against the parent slice set's (sigma, kappa) frontier bit-plane, and
+threshold.  kappa here plays the role of the MMA "n" dimension; with
+kappa >= 128 the MXU is fed full tiles with zero wasted outputs — the direct
+TPU realization of the paper's optimal m8n8k128 layout for Alg. 5.
+
+The parent slice set's frontier tile is gathered *inside* the kernel via a
+scalar-prefetch index map (``virtualToReal``), mirroring the paper's
+``F_curr^sigma[virtualToReal[vss]]`` access (Fig. 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pull_ms_kernel(v2r_ref, masks_ref, f_ref, out_ref, *, sigma):
+    del v2r_ref  # consumed by the index map only
+    mask = masks_ref[...]  # (1, tau) uint8
+    f_tile = f_ref[...]    # (1, sigma, kappa) uint8 in {0,1}
+    tau = mask.shape[1]
+    kappa = f_tile.shape[2]
+    bits = ((mask[0][:, None] >> jnp.arange(sigma, dtype=jnp.uint8)) & 1).astype(
+        jnp.int8
+    )  # (tau, sigma)
+    prod = jax.lax.dot_general(
+        bits,
+        f_tile[0].astype(jnp.int8),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )  # (tau, kappa) — MXU
+    out_ref[...] = (prod > 0).astype(jnp.uint8)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def pull_ms(
+    masks: jax.Array,
+    f_planes: jax.Array,
+    v2r: jax.Array,
+    *,
+    sigma: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """marks (N_q, tau, kappa) for queued VSSs.
+
+    masks:    (N_q, tau) uint8 — queued VSS masks (gathered by the driver)
+    f_planes: (num_sets, sigma, kappa) uint8 in {0,1} — frontier bit-planes
+    v2r:      (N_q,) int32 — parent slice set of each queued VSS
+    """
+    n_q, tau = masks.shape
+    num_sets, sig, kappa = f_planes.shape
+    assert sig == sigma
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_q,),
+        in_specs=[
+            pl.BlockSpec((1, tau), lambda i, v2r_: (i, 0)),
+            pl.BlockSpec((1, sigma, kappa), lambda i, v2r_: (v2r_[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tau, kappa), lambda i, v2r_: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pull_ms_kernel, sigma=sigma),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_q, tau, kappa), jnp.uint8),
+        interpret=interpret,
+    )(v2r, masks, f_planes)

@@ -1,0 +1,73 @@
+"""Packed-word multi-source pull: the VPU formulation of the (popc, AND)
+pull over kappa-bit packed frontier words.
+
+For one VSS, slice j with sigma-bit mask m pulls
+
+    marks[j, w] = OR_{b : m_b = 1}  F_packed[parent*sigma + b, w]
+
+i.e. at most sigma selective ORs of kappa/32-word rows — no unpacking, no
+matmul, 1/8 the frontier bytes of the byte-plane path.  Paired with
+kernels/scatter_or.py this keeps the whole MS-BFS state packed end-to-end
+(§Perf cell-1 iteration 4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pull_ms_packed_kernel(v2r_ref, masks_ref, f_ref, out_ref, *, sigma):
+    del v2r_ref
+    mask = masks_ref[...][0]      # (tau,) uint8
+    f = f_ref[...][0]             # (sigma, kw) uint32
+    kw = f.shape[1]
+    acc = jnp.zeros((mask.shape[0], kw), jnp.uint32)
+    for b in range(sigma):
+        sel = ((mask >> b) & 1).astype(jnp.uint32)[:, None]  # (tau, 1)
+        # sel in {0,1}: 0-sel = all-ones / all-zeros word (multiply-free)
+        acc = acc | ((jnp.uint32(0) - sel) & f[b][None, :])
+    out_ref[...] = acc[None]
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def pull_ms_packed(
+    masks: jax.Array,      # (N_q, tau) uint8
+    f_packed: jax.Array,   # (num_sets, sigma, kw) uint32 frontier words
+    v2r: jax.Array,        # (N_q,) int32
+    *,
+    sigma: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """marks (N_q, tau, kw) uint32 — packed pull for queued VSSs."""
+    n_q, tau = masks.shape
+    num_sets, sig, kw = f_packed.shape
+    assert sig == sigma
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_q,),
+        in_specs=[
+            pl.BlockSpec((1, tau), lambda i, v2r_: (i, 0)),
+            pl.BlockSpec((1, sigma, kw), lambda i, v2r_: (v2r_[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tau, kw), lambda i, v2r_: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pull_ms_packed_kernel, sigma=sigma),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_q, tau, kw), jnp.uint32),
+        interpret=interpret,
+    )(v2r, masks, f_packed)
+
+
+def pull_ms_packed_ref(masks, f_tiles, sigma: int = 8):
+    """Oracle.  masks (N_q, tau) uint8; f_tiles (N_q, sigma, kw) uint32."""
+    acc = jnp.zeros((masks.shape[0], masks.shape[1], f_tiles.shape[2]),
+                    jnp.uint32)
+    for b in range(sigma):
+        sel = ((masks >> b) & 1).astype(jnp.uint32)[:, :, None]
+        acc = acc | (sel * f_tiles[:, b][:, None, :])
+    return acc

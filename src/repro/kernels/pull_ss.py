@@ -1,0 +1,114 @@
+"""Single-source BFS pull kernel — the paper's "TC multiplication" stage on
+the TPU VPU.
+
+The paper packs 128 slices (tau) of sigma=8-bit masks into two m8n8k128
+binary MMAs.  On TPU the same work is one (BLK_V, 128) uint8 vector tile per
+grid step: lane l of sublane v computes ``popc(mask[v,l] & alpha[v]) > 0``
+directly in the (popc, AND) semiring the VPU evaluates natively via bitwise
+AND + compare.  tau=128 equals the native lane width, sigma=8 bits equals one
+byte — the paper's geometry is exactly one TPU register tile, so *no lane is
+wasted*, the analogue of the layout-optimality claim (no fragC output wasted).
+
+Two layouts:
+  * ``pull_ss``        — byte-per-slice masks (N_v, tau) uint8 (the clear one)
+  * ``pull_ss_packed`` — 4 slices per uint32 word (N_v, tau//4), the
+    "optimal layout": 4x fewer words per tile, per-byte nonzero evaluated with
+    a carry trick instead of per-slice compares.  This is the analogue of the
+    paper's 8x MMA-call reduction (their (A)->(AB) ablation); benchmarked in
+    benchmarks/table4_ablation.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLK_V = 256
+
+
+def _pull_ss_kernel(masks_ref, alphas_ref, out_ref):
+    m = masks_ref[...]
+    a = alphas_ref[...]  # (BLK_V, 1)
+    out_ref[...] = ((m & a) != 0).astype(jnp.uint8)
+
+
+def _pull_ss_packed_kernel(masks_ref, alphas_ref, out_ref):
+    m = masks_ref[...]  # (BLK_V, tau//4) uint32
+    a = alphas_ref[...].astype(jnp.uint32)  # (BLK_V, 1)
+    a32 = a * jnp.uint32(0x01010101)
+    t = m & a32
+    nz = ((t & jnp.uint32(0x7F7F7F7F)) + jnp.uint32(0x7F7F7F7F)) | t
+    out_ref[...] = (nz >> 7) & jnp.uint32(0x01010101)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def pull_ss(
+    masks: jax.Array,
+    alphas: jax.Array,
+    *,
+    block_v: int = DEFAULT_BLK_V,
+    interpret: bool = False,
+) -> jax.Array:
+    """marks = (masks & alphas[:,None]) != 0, tiled on the VPU.
+
+    masks:  (N_v, tau) uint8;  alphas: (N_v,) uint8.  N_v must be a multiple
+    of ``block_v`` (ops.py pads).
+    """
+    n_v, tau = masks.shape
+    assert n_v % block_v == 0, (n_v, block_v)
+    grid = (n_v // block_v,)
+    return pl.pallas_call(
+        _pull_ss_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, tau), lambda i: (i, 0)),
+            pl.BlockSpec((block_v, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_v, tau), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_v, tau), jnp.uint8),
+        interpret=interpret,
+    )(masks, alphas[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def pull_ss_packed(
+    masks_packed: jax.Array,
+    alphas: jax.Array,
+    *,
+    block_v: int = DEFAULT_BLK_V,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-word pull: masks_packed (N_v, tau//4) uint32 -> marks words."""
+    n_v, words = masks_packed.shape
+    assert n_v % block_v == 0, (n_v, block_v)
+    grid = (n_v // block_v,)
+    return pl.pallas_call(
+        _pull_ss_packed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, words), lambda i: (i, 0)),
+            pl.BlockSpec((block_v, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_v, words), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_v, words), jnp.uint32),
+        interpret=interpret,
+    )(masks_packed, alphas[:, None])
+
+
+def pack_masks(masks: jax.Array) -> jax.Array:
+    """(N_v, tau) uint8 -> (N_v, tau//4) uint32, little-endian bytes."""
+    n_v, tau = masks.shape
+    assert tau % 4 == 0
+    m = masks.reshape(n_v, tau // 4, 4).astype(jnp.uint32)
+    shifts = jnp.arange(4, dtype=jnp.uint32) * 8
+    return (m << shifts).sum(-1).astype(jnp.uint32)
+
+
+def unpack_marks(marks_packed: jax.Array) -> jax.Array:
+    """(N_v, tau//4) uint32 0/1-byte words -> (N_v, tau) uint8."""
+    n_v, words = marks_packed.shape
+    shifts = jnp.arange(4, dtype=jnp.uint32) * 8
+    b = (marks_packed[:, :, None] >> shifts) & jnp.uint32(0xFF)
+    return b.astype(jnp.uint8).reshape(n_v, words * 4)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth; kernels must match bit-exactly
+(integer semirings — no tolerance needed, we still use assert_allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def pull_ss_ref(masks: jax.Array, alphas: jax.Array) -> jax.Array:
+    """SS-BFS pull over the (popc, AND) semiring.
+
+    masks:  (N_v, tau) uint8 — sigma-bit connectivity mask per slice
+    alphas: (N_v,)     uint8 — frontier word of the parent slice set
+                               (0 for VSSs not in the work queue)
+    returns marks (N_v, tau) uint8 in {0,1}: popc(mask & alpha) > 0
+    """
+    return ((masks & alphas[:, None]) != 0).astype(jnp.uint8)
+
+
+def pull_ss_packed_ref(masks_packed: jax.Array, alphas: jax.Array) -> jax.Array:
+    """Packed-word variant ("optimal layout"): 4 slices per uint32 word.
+
+    masks_packed: (N_v, tau//4) uint32 (little-endian byte k = slice 4w+k)
+    alphas:       (N_v,) uint8
+    returns marks_packed (N_v, tau//4) uint32 with byte b in {0,1}.
+    """
+    a32 = alphas.astype(jnp.uint32) * jnp.uint32(0x01010101)
+    t = masks_packed & a32[:, None]
+    # per-byte nonzero: high bit of ((t & 0x7f..) + 0x7f..) | t
+    nz = ((t & jnp.uint32(0x7F7F7F7F)) + jnp.uint32(0x7F7F7F7F)) | t
+    return (nz >> 7) & jnp.uint32(0x01010101)
+
+
+def pull_ms_ref(masks: jax.Array, f_tiles: jax.Array) -> jax.Array:
+    """Multi-source pull: the (popc, AND) GEMM of paper Alg. 5 on the MXU.
+
+    masks:   (N_q, tau) uint8 — sigma-bit masks of queued VSSs
+    f_tiles: (N_q, sigma, kappa) uint8 in {0,1} — frontier bit-planes of each
+             queued VSS's parent slice set (pre-gathered)
+    returns marks (N_q, tau, kappa) uint8 in {0,1}.
+    """
+    sigma = f_tiles.shape[1]
+    bits = ((masks[:, :, None] >> jnp.arange(sigma, dtype=jnp.uint8)) & 1).astype(
+        jnp.int8
+    )  # (N_q, tau, sigma)
+    prod = jnp.einsum(
+        "vts,vsk->vtk", bits, f_tiles.astype(jnp.int8),
+        preferred_element_type=jnp.int32,
+    )
+    return (prod > 0).astype(jnp.uint8)
+
+
+def frontier_sweep_ref(
+    v_curr: jax.Array, v_next: jax.Array, level: jax.Array, ell: jax.Array,
+    sigma: int = 8,
+):
+    """Stage-2 frontier finalization (paper Alg. 3 lines 33-50), fused.
+
+    v_curr, v_next: (n_pad,) uint8 visited bytes in {0,1}
+    level:          (n_pad,) int32
+    ell:            scalar int32 — current BFS depth
+    returns (v_curr_new, level_new, f_words, active_sets):
+      f_words     (n_pad//sigma,) uint8 — sigma-bit frontier word per slice set
+      active_sets (n_pad//sigma,) uint8 in {0,1}
+    """
+    diff = v_next & (1 - v_curr)
+    level_new = jnp.where(diff != 0, ell, level)
+    weights = (1 << jnp.arange(sigma, dtype=jnp.int32)).astype(jnp.int32)
+    words = (diff.reshape(-1, sigma).astype(jnp.int32) * weights).sum(-1)
+    f_words = words.astype(jnp.uint8)
+    active_sets = (words != 0).astype(jnp.uint8)
+    return v_next, level_new, f_words, active_sets

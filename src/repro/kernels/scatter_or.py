@@ -1,0 +1,85 @@
+"""Scatter-OR Pallas kernel — the missing XLA primitive that unlocks the
+paper's packed kappa-bit MS-BFS state on TPU (§Perf cell-1 iteration 4).
+
+XLA scatter combiners are {set, add, min, max, mul}: OR over packed uint32
+words is inexpressible, which forced the byte-plane visited layout
+(DESIGN.md §2) costing 8x the byte floor.  This kernel implements
+
+    out = dest;  out[rows[i], :] |= marks[i, :]   (duplicates OR-combine)
+
+as a single Pallas grid of (n_rows + t) steps:
+  * phase 1 (steps 0..n_rows):   out[s]       = dest[s]          (init copy)
+  * phase 2 (steps n..n+t):      out[rows[i]] |= marks[i]        (accumulate)
+
+Destination block indices come from the scalar-prefetched ``rows`` array —
+the gather-index pattern of kernels/pull_ms.py applied on the *output* side.
+TPU grid steps execute sequentially on a core, so duplicate rows
+read-modify-write in a well-defined order; phase 2 reads ``out_ref`` (the
+live output buffer), never stale inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_or_kernel(rows_ref, dest_ref, marks_ref, out_ref, *, n_rows):
+    del rows_ref  # consumed by the index maps only
+    s = pl.program_id(0)
+    init_phase = s < n_rows
+    cur = out_ref[...]
+    out_ref[...] = jnp.where(init_phase, dest_ref[...],
+                             cur | marks_ref[...])
+
+
+def scatter_or(
+    dest: jax.Array,     # (n_rows, words) uint32
+    rows: jax.Array,     # (t,) int32 — destination row per scatter element
+    marks: jax.Array,    # (t, words) uint32 — values to OR in
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns dest with marks OR-scattered in (duplicate-safe)."""
+    n_rows, words = dest.shape
+    t = marks.shape[0]
+
+    def out_index(s, rows_):
+        # phase 1: own row s; phase 2: the scatter target rows[s - n_rows]
+        i2 = jnp.clip(s - n_rows, 0, t - 1)
+        return (jnp.where(s < n_rows, s, rows_[i2]), 0)
+
+    def dest_index(s, rows_):
+        return (jnp.where(s < n_rows, s, 0), 0)
+
+    def marks_index(s, rows_):
+        return (jnp.clip(s - n_rows, 0, t - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rows + t,),
+        in_specs=[
+            pl.BlockSpec((1, words), dest_index),
+            pl.BlockSpec((1, words), marks_index),
+        ],
+        out_specs=pl.BlockSpec((1, words), out_index),
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_or_kernel, n_rows=n_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dest.shape, dest.dtype),
+        interpret=interpret,
+    )(rows, dest, marks)
+
+
+def scatter_or_ref(dest, rows, marks):
+    """Oracle: OR-scatter via 32 bit-plane scatter-max passes."""
+    acc = dest
+    for b in range(32):
+        bit = ((marks >> b) & jnp.uint32(1)).astype(jnp.uint32)
+        plane = jnp.zeros(dest.shape, jnp.uint32).at[rows].max(bit)
+        acc = acc | (plane << b)
+    return acc

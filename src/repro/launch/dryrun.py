@@ -1,0 +1,519 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init, and only the dry-run may see 512 placeholder devices.
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture x applicable input shape x mesh) cell:
+  jit(step).lower(*ShapeDtypeStructs).compile()
+must succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.
+Records memory_analysis() / cost_analysis() / collective stats to JSON for
+EXPERIMENTS.md §Dry-run and the §Roofline table.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+(--all spawns one subprocess per cell: isolates compile failures/timeouts.)
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def input_specs(arch_name: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell —
+    weak-type-correct, shardable, no device allocation."""
+    import jax
+    import jax.numpy as jnp
+    import repro.configs as configs
+    from repro.configs.base import SHAPES
+
+    cfg = configs.get(arch_name)
+    shape = SHAPES[shape_name]
+    S = jax.ShapeDtypeStruct
+    b, l = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": S((b, l), jnp.int32),
+                 "targets": S((b, l), jnp.int32)}
+        if cfg.modality == "embeds":
+            specs = {"embeds": S((b, l, cfg.d_model), jnp.float32),
+                     "targets": S((b, l), jnp.int32)}
+        elif cfg.modality == "prefix":
+            specs = {"tokens": S((b, l - cfg.prefix_len), jnp.int32),
+                     "targets": S((b, l - cfg.prefix_len), jnp.int32),
+                     "embeds": S((b, cfg.prefix_len, cfg.d_model),
+                                 jnp.float32)}
+        return specs
+    if shape.kind == "prefill":
+        if cfg.modality == "embeds":
+            return {"embeds": S((b, l, cfg.d_model), jnp.float32)}
+        if cfg.modality == "prefix":
+            return {"tokens": S((b, l - cfg.prefix_len), jnp.int32),
+                    "embeds": S((b, cfg.prefix_len, cfg.d_model),
+                                jnp.float32)}
+        return {"tokens": S((b, l), jnp.int32)}
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": S((b, 1), jnp.int32),
+            "cache_len": S((), jnp.int32)}
+
+
+def apply_overrides(cfg, overrides: str | None):
+    """'remat=dots;moe.dispatch_dtype=bfloat16;kv_cache_dtype=float8_e4m3fn'
+    -> dataclasses.replace chain (nested via dots).  §Perf variant hook."""
+    import dataclasses
+    if not overrides:
+        return cfg
+    for item in overrides.split(";"):
+        if not item.strip():
+            continue
+        key, val = item.split("=", 1)
+        for cast in (int, float):
+            try:
+                val = cast(val)
+                break
+            except ValueError:
+                continue
+        parts = key.strip().split(".")
+        if len(parts) == 1:
+            cfg = dataclasses.replace(cfg, **{parts[0]: val})
+        else:
+            sub = getattr(cfg, parts[0])
+            sub = dataclasses.replace(sub, **{parts[1]: val})
+            cfg = dataclasses.replace(cfg, **{parts[0]: sub})
+    return cfg
+
+
+def _lower_lm_cell(arch_name: str, shape_name: str, multi_pod: bool,
+                   overrides: str | None = None):
+    import jax
+    import repro.configs as configs
+    from repro.configs.base import SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as M
+    from repro.serve import serve_loop
+    from repro.train import optimizer as O
+    from repro.train import sharding as Sh
+    from repro.train import train_loop
+
+    cfg = apply_overrides(configs.get(arch_name), overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = input_specs(arch_name, shape_name)
+
+    params_sds = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+    pspecs = Sh.fix_specs(params_sds,
+                          Sh.param_specs(cfg, params_sds, mesh), mesh)
+    p_shardings = Sh.to_shardings(mesh, pspecs)
+
+    if shape.kind == "train":
+        ocfg = O.AdamWConfig()
+        opt_sds = jax.eval_shape(lambda p: O.init_opt_state(p, ocfg),
+                                 params_sds)
+        ospecs = {"mu": pspecs, "nu": pspecs,
+                  "step": jax.sharding.PartitionSpec()}
+        raw = {k: v for k, v in Sh.batch_specs(cfg, shape, mesh).items()
+               if k in specs}
+        bspecs = Sh.fix_specs(specs, raw, mesh)
+
+        def raw_step(p, o, b):
+            import repro.models.model as MM
+            (l, parts), g = jax.value_and_grad(
+                lambda pp: MM.loss_fn(cfg, pp, b), has_aux=True)(p)
+            np_, no_, om = O.adamw_update(p, g, o, ocfg)
+            return np_, no_, {"loss": l, **om}
+
+        P = jax.sharding.PartitionSpec
+        jitted = jax.jit(
+            raw_step,
+            in_shardings=(p_shardings, Sh.to_shardings(mesh, ospecs),
+                          Sh.to_shardings(mesh, bspecs)),
+            out_shardings=(p_shardings, Sh.to_shardings(mesh, ospecs),
+                           Sh.to_shardings(mesh, {
+                               "loss": P(), "grad_norm": P(), "lr": P()})),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, opt_sds, specs)
+    elif shape.kind == "prefill":
+        raw = {k: v for k, v in Sh.batch_specs(cfg, shape, mesh).items()
+               if k in specs}
+        bspecs = Sh.fix_specs(specs, raw, mesh)
+
+        def prefill_step(p, batch):
+            logits, _ = M.forward(cfg, p, batch.get("tokens"),
+                                  batch.get("embeds"))
+            return logits[:, -1:]
+
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(p_shardings, Sh.to_shardings(mesh, bspecs)),
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, specs)
+    else:  # decode
+        cache_sds = jax.eval_shape(
+            lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+        cspecs = Sh.fix_specs(cache_sds,
+                              Sh.cache_specs(cfg, shape, mesh), mesh)
+        P = jax.sharding.PartitionSpec
+        tok_spec = Sh.fix_specs(
+            {"tokens": specs["tokens"]},
+            {"tokens": Sh.batch_specs(cfg, shape, mesh)["tokens"]},
+            mesh)["tokens"]
+        jitted = jax.jit(
+            lambda p, c, t, n: M.decode_step(cfg, p, c, t, n),
+            in_shardings=(p_shardings, Sh.to_shardings(mesh, cspecs),
+                          jax.sharding.NamedSharding(mesh, tok_spec),
+                          jax.sharding.NamedSharding(mesh, P())),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, cache_sds, specs["tokens"],
+                                   specs["cache_len"])
+    return lowered, mesh, cfg, shape
+
+
+def _lower_bfs_cell(shape_name: str, multi_pod: bool):
+    """The paper's own workload: one fused MS-BFS closeness level (kappa=16
+    per device, sources over all axes — the paper's 100-GPU partitioning) or
+    one row-parallel SS-BFS level ('model'-sharded graph + frontier-word
+    all-gather)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    import functools
+
+    from repro.configs import blest_bfs as B
+    from repro.launch.mesh import make_production_mesh
+    from repro.kernels import ref as kref
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    S = jax.ShapeDtypeStruct
+    n, nv, sigma, tau = B.N_VERTICES, B.NUM_VSS, B.SIGMA, B.TAU
+    num_sets = n // sigma
+
+    if shape_name.startswith("msbfs"):
+        # variants: msbfs_level (baseline kappa=16, full VSS sweep),
+        # msbfs_k64 (4x more BFS lanes per mask read),
+        # msbfs_queued (frontier-compacted: |Q| = N_v/8 VSSs gathered),
+        # msbfs_k64_queued (both) — §Perf hillclimb ladder.
+        kappa = 64 if ("k64" in shape_name or "packed" in shape_name) else 16
+        queued = "queued" in shape_name or "packed" in shape_name
+        packed = "packed" in shape_name
+        nv_proc = nv // 8 if queued else nv
+        axes = mesh.axis_names
+
+        if packed:
+            # end-to-end packed kappa-bit state (scatter_or + packed pull)
+            from repro.kernels.pull_ms_packed import pull_ms_packed_ref
+            from repro.kernels.scatter_or import scatter_or_ref
+            kw = kappa // 32
+
+            def level(masks, row_ids, v2r, qids, v_curr, f_packed, far,
+                      ell):
+                masks, row_ids, v2r = masks[qids], row_ids[qids], v2r[qids]
+                marks = pull_ms_packed_ref(masks, f_packed[v2r])
+                v_next = scatter_or_ref(v_curr, row_ids.reshape(-1),
+                                        marks.reshape(-1, kw))
+                diff = v_next & ~v_curr
+                new = jax.lax.population_count(diff).sum(axis=1).astype(
+                    jnp.int32)
+                far = far + ell * new
+                f = diff[: n].reshape(num_sets, sigma, kw)
+                f = jnp.concatenate(
+                    [f, jnp.zeros((1, sigma, kw), jnp.uint32)])
+                return v_next, f, jax.lax.psum(far, axes)
+
+            wrapped = shard_map(
+                level, mesh=mesh,
+                in_specs=(P(), P(), P(), P(), P(), P(), P(), P()),
+                out_specs=(P(), P(), P()), check_rep=False)
+            args = (
+                S((nv, tau), jnp.uint8),
+                S((nv, tau), jnp.int32),
+                S((nv,), jnp.int32),
+                S((nv_proc,), jnp.int32),
+                S((n + sigma, kw), jnp.uint32),   # packed visited words
+                S((num_sets + 1, sigma, kw), jnp.uint32),
+                S((n + sigma,), jnp.int32),
+                S((), jnp.int32),
+            )
+            with mesh:
+                lowered = jax.jit(wrapped).lower(*args)
+            return lowered, mesh
+
+        def level(masks, row_ids, v2r, qids, v_curr, f_planes, far, ell):
+            # one Alg.5 level: MXU pull + scatter + stage-2 sweep + Eq.7 far
+            if queued:  # frontier-compacted: gather active VSSs only
+                masks = masks[qids]
+                row_ids = row_ids[qids]
+                v2r = v2r[qids]
+            marks = kref.pull_ms_ref(masks, f_planes[v2r])
+            v_next = v_curr.at[row_ids.reshape(-1)].max(
+                marks.reshape(-1, kappa))
+            diff = v_next & (1 - v_curr)
+            new = diff.sum(axis=1).astype(jnp.int32)
+            far = far + ell * new
+            f = diff[: n].reshape(num_sets, sigma, kappa)
+            f = jnp.concatenate([f, jnp.zeros((1, sigma, kappa), jnp.uint8)])
+            # the paper's final MPI reduction (lowered once per batch):
+            far_red = jax.lax.psum(far, axes)
+            return v_next, f, far_red
+
+        wrapped = shard_map(
+            level, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), P(), P(), P(), P()),
+            out_specs=(P(), P(), P()), check_rep=False)
+        args = (
+            S((nv, tau), jnp.uint8),                    # masks (replicated)
+            S((nv, tau), jnp.int32),                    # row_ids
+            S((nv,), jnp.int32),                        # virtualToReal
+            S((nv_proc,), jnp.int32),                   # active VSS queue
+            S((n + sigma, kappa), jnp.uint8),           # V_curr byte-planes
+            S((num_sets + 1, sigma, kappa), jnp.uint8),  # frontier planes
+            S((n + sigma,), jnp.int32),                 # far
+            S((), jnp.int32),                           # ell
+        )
+        with mesh:
+            lowered = jax.jit(wrapped).lower(*args)
+    elif shape_name == "ssbfs_replicated":
+        # collective-heavy baseline: VSS-sharded pull into a REPLICATED
+        # visited vector, OR-all-reduced (pmax over bytes) every level —
+        # what a direct port of single-GPU state replication costs.
+        shards = mesh.shape["model"]
+        nv_per = nv // shards
+
+        def level(masks_l, rows_l, v2r_l, v, lvl, f_all, ell):
+            alphas = f_all[v2r_l]
+            marks = kref.pull_ss_ref(masks_l, alphas)
+            v_next = v.at[rows_l.reshape(-1)].max(marks.reshape(-1))
+            v_next = jax.lax.pmax(v_next, "model")  # n-byte all-reduce
+            v_new, lvl_new, f_words, _ = kref.frontier_sweep_ref(
+                v, v_next, lvl, ell, sigma=sigma)
+            f_next = jnp.concatenate(
+                [f_words[: num_sets], jnp.zeros(1, jnp.uint8)])
+            return v_new, lvl_new, f_next
+
+        wrapped = shard_map(
+            level, mesh=mesh,
+            in_specs=(P("model"), P("model"), P("model"), P(), P(), P(),
+                      P()),
+            out_specs=(P(), P(), P()), check_rep=False)
+        args = (
+            S((nv, tau), jnp.uint8),
+            S((nv, tau), jnp.int32),
+            S((nv,), jnp.int32),
+            S((n + sigma,), jnp.uint8),
+            S((n + sigma,), jnp.int32),
+            S((num_sets + 1,), jnp.uint8),
+            S((), jnp.int32),
+        )
+        with mesh:
+            lowered = jax.jit(wrapped).lower(*args)
+    elif shape_name == "ssbfs_row":
+        shards = mesh.shape["model"]
+        rows_per = n // shards
+        sets_per = rows_per // sigma
+        nv_per = nv // shards
+
+        def level(masks_l, rows_l, v2r_l, v_l, lvl_l, f_all, ell):
+            v_l, lvl_l = v_l[0], lvl_l[0]
+            alphas = f_all[v2r_l]
+            marks = kref.pull_ss_ref(masks_l, alphas)
+            v_next = v_l.at[rows_l.reshape(-1)].max(marks.reshape(-1))
+            v_new, lvl_new, f_local, _ = kref.frontier_sweep_ref(
+                v_l, v_next, lvl_l, ell, sigma=sigma)
+            f_mine = f_local[:sets_per]
+            f_g = jax.lax.all_gather(f_mine, "model", tiled=True)
+            f_next = jnp.concatenate([f_g, jnp.zeros(1, jnp.uint8)])
+            return v_new[None], lvl_new[None], f_next
+
+        wrapped = shard_map(
+            level, mesh=mesh,
+            in_specs=(P("model"), P("model"), P("model"),
+                      P("model"), P("model"), P(), P()),
+            out_specs=(P("model"), P("model"), P()), check_rep=False)
+        args = (
+            S((nv, tau), jnp.uint8),
+            S((nv, tau), jnp.int32),
+            S((nv,), jnp.int32),
+            S((shards, rows_per + sigma), jnp.uint8),
+            S((shards, rows_per + sigma), jnp.int32),
+            S((num_sets + 1,), jnp.uint8),
+            S((), jnp.int32),
+        )
+        with mesh:
+            lowered = jax.jit(wrapped).lower(*args)
+    else:
+        raise ValueError(shape_name)
+    return lowered, mesh
+
+
+BFS_SHAPES = ["msbfs_level", "ssbfs_row"]
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             overrides: str | None = None) -> dict:
+    import jax
+    from repro.launch import roofline as R
+
+    t0 = time.time()
+    if arch_name == "blest-bfs":
+        lowered, mesh = _lower_bfs_cell(shape_name, multi_pod)
+        cfg = shape = None
+    else:
+        lowered, mesh, cfg, shape = _lower_lm_cell(arch_name, shape_name,
+                                                   multi_pod, overrides)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    chips = mesh.devices.size
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_info[k] = getattr(mem, k, None)
+    cost = compiled.cost_analysis() or {}
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+
+    # analytic closed-form (exact loop-aware) flops/bytes; HLO numbers are
+    # recorded raw (XLA counts loop bodies once — see launch/analytic.py)
+    from repro.launch import analytic as A
+    if cfg is not None:
+        cost_cf = A.cell_cost(cfg, shape)
+        loop_mult = max(cfg.n_layers, 1)
+        if cfg.moe is not None and cfg.moe_every > 1:
+            loop_mult = cfg.n_layers // cfg.moe_every
+    else:
+        from repro.configs import blest_bfs as BB
+        cost_cf = A.bfs_cell_cost(shape_name, BB.N_VERTICES, BB.NUM_VSS,
+                                  BB.TAU, BB.SIGMA, chips=int(chips))
+        loop_mult = 1
+    coll = R.parse_collectives(hlo, loop_multiplier=loop_mult)
+    terms = R.roofline_terms(cost_cf.flops, cost_cf.hbm_bytes,
+                             coll.wire_bytes, chips)
+
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(chips),
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "memory_analysis": mem_info,
+        "flops": cost_cf.flops,
+        "hbm_bytes": cost_cf.hbm_bytes,
+        "analytic_detail": cost_cf.detail,
+        "hlo_flops_raw": hlo_flops,
+        "hlo_bytes_raw": hlo_bytes,
+        "loop_multiplier": loop_mult,
+        "collectives": coll.to_json(),
+        "roofline": terms,
+        "hlo_lines": hlo.count("\n"),
+        "status": "ok",
+    }
+    if cfg is not None:
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        n_active = cfg.active_param_count()
+        mf = R.model_flops(n_active, tokens, shape.kind)
+        result["model_flops"] = mf
+        result["useful_flops_ratio"] = mf / cost_cf.flops
+        result["params_total"] = cfg.param_count()
+        result["params_active"] = n_active
+    return result
+
+
+def iter_cells():
+    import repro.configs as configs
+    from repro.configs.base import SHAPES, shape_applicable
+
+    for arch in configs.ASSIGNED:
+        cfg = configs.get(arch)
+        for sname, shape in SHAPES.items():
+            if shape_applicable(cfg, shape):
+                yield arch, sname
+            # skipped cells are recorded by the caller
+    for sname in BFS_SHAPES:
+        yield "blest-bfs", sname
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--override", default=None,
+                    help="config overrides, e.g. 'remat=dots;moe.dispatch_dtype=bfloat16'")
+    ap.add_argument("--tag", default=None, help="output filename suffix")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if not args.all:
+        for mp in meshes:
+            res = run_cell(args.arch, args.shape, mp, args.override)
+            if args.override:
+                res["override"] = args.override
+            tag = f"__{args.tag}" if args.tag else ""
+            name = f"{args.arch}__{args.shape}__{res['mesh']}{tag}.json"
+            with open(os.path.join(args.out, name), "w") as f:
+                json.dump(res, f, indent=1)
+            print(json.dumps({k: res[k] for k in
+                              ("arch", "shape", "mesh", "compile_s",
+                               "flops", "hbm_bytes", "status")}))
+        return
+
+    import subprocess
+    cells = list(iter_cells())
+    for arch, sname in cells:
+        for mp in meshes:
+            mesh_tag = "2x16x16" if mp else "16x16"
+            out_file = os.path.join(args.out,
+                                    f"{arch}__{sname}__{mesh_tag}.json")
+            if os.path.exists(out_file):
+                print(f"skip (done): {arch} {sname} {mesh_tag}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", sname,
+                   "--mesh", "multi" if mp else "single", "--out", args.out]
+            print(f"=== {arch} {sname} {mesh_tag}", flush=True)
+            try:
+                proc = subprocess.run(cmd, timeout=args.timeout,
+                                      capture_output=True, text=True)
+                if proc.returncode != 0:
+                    err = {"arch": arch, "shape": sname, "mesh": mesh_tag,
+                           "status": "error",
+                           "stderr": proc.stderr[-4000:]}
+                    with open(out_file, "w") as f:
+                        json.dump(err, f, indent=1)
+                    print(f"FAILED: {arch} {sname} {mesh_tag}")
+                else:
+                    print(proc.stdout.strip().splitlines()[-1]
+                          if proc.stdout.strip() else "(no output)")
+            except subprocess.TimeoutExpired:
+                with open(out_file, "w") as f:
+                    json.dump({"arch": arch, "shape": sname,
+                               "mesh": mesh_tag, "status": "timeout"}, f)
+                print(f"TIMEOUT: {arch} {sname} {mesh_tag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_wire_bytes / (chips * link_bw)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment-provided).
+
+``cost_analysis`` provides flops / bytes accessed.  Collective bytes are NOT
+in cost_analysis: we parse the *compiled* (post-SPMD-partitioning) HLO text
+and sum the result-shape bytes of every collective op, scaled by a per-kind
+wire factor (ring all-reduce moves ~2x its payload per device; all-gather /
+reduce-scatter / all-to-all / collective-permute move ~1x their result).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_FACTORS = {
+    "all-reduce": 2.0,        # ring: reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],\s/{}]*\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict
+    wire_bytes: float
+
+    def to_json(self):
+        return {"counts": self.counts, "result_bytes": self.result_bytes,
+                "wire_bytes": self.wire_bytes}
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*\{?")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its lines (post-partitioning HLO text)."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("(" in s or s.startswith("ENTRY")):
+            head = s.split("(")[0].replace("ENTRY", "").strip()
+            name = head.lstrip("%").strip()
+            if name:
+                current = name
+                comps[current] = []
+                continue
+        if current is not None:
+            comps[current].append(line)
+        if s == "}":
+            current = None
+    return comps
+
+
+def _loop_multipliers(comps: dict[str, list[str]], default_trip: int = 1
+                      ) -> dict[str, int]:
+    """Execution multiplier per computation: bodies of while loops execute
+    trip-count times; nested loops compose multiplicatively.  Trip counts are
+    read from the largest integer constant in the loop's condition
+    computation (XLA emits ``compare(iv, constant(N))`` there)."""
+    body_of: dict[str, tuple[str, int]] = {}  # body comp -> (parent, trip)
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            trip = default_trip
+            consts = [int(c) for ln in comps.get(cond, [])
+                      for c in _CONST_RE.findall(ln)]
+            if consts:
+                trip = max(consts)
+            body_of[body] = (cname, max(trip, 1))
+
+    mult: dict[str, int] = {}
+
+    def resolve(name: str, depth=0) -> int:
+        if name in mult:
+            return mult[name]
+        if depth > 20 or name not in body_of:
+            mult[name] = 1
+            return 1
+        parent, trip = body_of[name]
+        m = resolve(parent, depth + 1) * trip
+        mult[name] = m
+        return m
+
+    for name in comps:
+        resolve(name)
+    return mult
+
+
+def parse_collectives(hlo_text: str, loop_multiplier: int = 1
+                      ) -> CollectiveStats:
+    """Sum collective payloads from post-partitioning HLO, scaling each
+    collective by its computation's loop-execution multiplier (XLA prints
+    while/scan bodies once; trip counts are recovered from loop conditions).
+    ``loop_multiplier`` is the fallback trip count when a condition constant
+    cannot be parsed."""
+    comps = _split_computations(hlo_text)
+    mults = _loop_multipliers(comps, default_trip=loop_multiplier)
+    counts: dict[str, int] = {}
+    rbytes: dict[str, int] = {}
+    wire = 0.0
+    for cname, lines in comps.items():
+        mult = mults.get(cname, 1)
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            shapes_txt, kind = m.group(1), m.group(2).lower()
+            if "-done" in line.split("=")[1][:120]:
+                continue  # count async collectives once (at -start)
+            b = shape_bytes(shapes_txt)
+            counts[kind] = counts.get(kind, 0) + mult
+            rbytes[kind] = rbytes.get(kind, 0) + b * mult
+            wire += b * mult * _COLLECTIVE_FACTORS[kind]
+    return CollectiveStats(counts, rbytes, wire)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_wire_bytes: float, chips: int) -> dict:
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = bytes_accessed / (chips * HBM_BW)
+    collective_s = collective_wire_bytes / (chips * LINK_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound,
+        # fraction of the ideal (dominant-term-only) time: how close the
+        # other two terms are to being hidden under the dominant one
+        "overlap_headroom": bound / total if total > 0 else 0.0,
+    }
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6·N·D for training, 2·N·D for forward-only (inference)."""
+    mult = 6 if kind == "train" else 2
+    return float(mult) * n_params_active * tokens

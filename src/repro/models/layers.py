@@ -1,0 +1,218 @@
+"""Shared transformer building blocks (pure-function style, explicit params).
+
+Everything is written against stacked-per-layer parameter pytrees so the
+model loops with ``lax.scan`` (compile-time O(1) in depth).  Attention is
+blockwise ("flash-style" online softmax over KV chunks) so 32k-sequence
+prefill never materializes an (L, L) score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+Dtype = jnp.dtype
+
+
+# ------------------------------------------------------------------ norms --
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------- rope --
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention --
+def blockwise_attention(
+    q: jax.Array,          # (B, Lq, H, D)
+    k: jax.Array,          # (B, Lk, K, D)
+    v: jax.Array,          # (B, Lk, K, D)
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0]
+    kv_valid_len: jax.Array | None = None,  # mask kv positions >= this
+    block_k: int = 1024,
+) -> jax.Array:
+    """GQA attention with online softmax over KV blocks (flash-style).
+
+    Never materializes more than (B, H, Lq, block_k) scores; 500k-token KV
+    decoding and 32k prefill both stay within a bounded working set.
+    """
+    b, lq, h, d = q.shape
+    _, lk, kh, _ = k.shape
+    groups = h // kh
+    scale = 1.0 / math.sqrt(d)
+    block_k = min(block_k, lk)
+    nblocks = -(-lk // block_k)
+    pad = nblocks * block_k - lk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblocks, block_k, kh, d)
+    vb = v.reshape(b, nblocks, block_k, kh, d)
+
+    q = q.reshape(b, lq, kh, groups, d)
+    q_pos = (jnp.arange(lq) + q_offset)[None, :, None, None]  # b lq kh g
+
+    def body(carry, inp):
+        m, num, den = carry
+        kblk, vblk, blk_idx = inp
+        kblk = kblk.astype(q.dtype)  # fp8/int8 caches: dequant-on-load
+        vblk = vblk.astype(q.dtype)
+        kv_pos = blk_idx * block_k + jnp.arange(block_k)
+        s = jnp.einsum("blkgd,bskd->blkgs", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((1, 1, 1, 1, block_k), bool)
+        if causal:
+            mask = mask & (kv_pos[None, None, None, None, :]
+                           <= q_pos[..., None])
+        if kv_valid_len is not None:
+            mask = mask & (kv_pos[None, None, None, None, :] < kv_valid_len)
+        if pad:
+            mask = mask & (kv_pos[None, None, None, None, :] < lk)
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(corr), corr, 0.0)
+        num = num * corr[..., None] + jnp.einsum(
+            "blkgs,bskd->blkgd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        den = den * corr + p.sum(axis=-1)
+        return (m_new, num, den), None
+
+    m0 = jnp.full((b, lq, kh, groups), -jnp.inf, jnp.float32)
+    num0 = jnp.zeros((b, lq, kh, groups, d), jnp.float32)
+    den0 = jnp.zeros((b, lq, kh, groups), jnp.float32)
+    (m, num, den), _ = jax.lax.scan(
+        body, (m0, num0, den0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nblocks)))
+    out = num / jnp.maximum(den[..., None], 1e-30)
+    return out.reshape(b, lq, h, d).astype(q.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+
+
+def init_attention(key, cfg: AttentionConfig, dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, kv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, kv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * (s / math.sqrt(2))
+               ).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones(hd, jnp.float32)
+        p["k_norm"] = jnp.ones(hd, jnp.float32)
+    return p
+
+
+def attention(
+    p, x: jax.Array, cfg: AttentionConfig, *,
+    positions: jax.Array,
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+    cache_len: jax.Array | None = None,
+    block_k: int = 1024,
+):
+    """Returns (out, (k_new, v_new)).  With a KV cache this is a decode /
+    cached-prefill step: new K/V are written at ``cache_len`` offsets."""
+    b, l, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, l, h, hd)
+    k = (x @ p["wk"]).reshape(b, l, kv, hd)
+    v = (x @ p["wv"]).reshape(b, l, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_cache is None:
+        out = blockwise_attention(q, k, v, causal=True, block_k=block_k)
+        k_out, v_out = k, v
+    else:
+        ck, cv = kv_cache
+        k_out = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                             (0, cache_len, 0, 0))
+        v_out = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                             (0, cache_len, 0, 0))
+        out = blockwise_attention(
+            q, k_out, v_out, causal=False, q_offset=cache_len,
+            kv_valid_len=cache_len + l, block_k=block_k)
+    out = out.reshape(b, l, h * hd) @ p["wo"]
+    return out, (k_out, v_out)
+
+
+# -------------------------------------------------------------------- mlp --
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def mlp(p, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# -------------------------------------------------------------- embedding --
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """Tied softmax head: logits in f32 for loss stability."""
+    return jnp.einsum("bld,vd->blv", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,175 @@
+"""Mamba2 — SSD (state-space duality, arXiv:2405.21060) in JAX.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk work is dense
+matmuls (MXU-friendly) and the inter-chunk recurrence is a short ``lax.scan``
+over chunk states — the TPU-appropriate realization (the original CUDA kernel
+fuses this differently; the algebra is identical).
+
+Decode is the O(1) recurrent step: ``state = decay * state + dt * B ⊗ x``,
+``y = C · state`` — which is why the 500k-token long-context decode shape is
+trivially sub-quadratic for this family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(key, cfg: Mamba2Config, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    s = 1.0 / math.sqrt(d)
+    # projection order: [z (di), x (di), B (n), C (n), dt (h)]
+    proj_out = 2 * di + 2 * n + h
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * s).astype(dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_width, di + 2 * n))
+                 * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones(h, jnp.float32),
+        "dt_bias": jnp.zeros(h, jnp.float32),
+        "norm": jnp.ones(di, jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (di, d))
+                     * (1.0 / math.sqrt(di))).astype(dtype),
+    }
+
+
+def _split_proj(cfg: Mamba2Config, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _ssd_chunked(x, dt, A, B, C, D, chunk):
+    """x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, n).
+
+    Returns (y, final_state) with state (b, h, p, n).
+    Single SSM group (ngroups=1), per the assigned mamba2-370m config.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    assert nc * chunk == l, (l, chunk)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]      # (b,nc,q,h) negative
+    dA_cum = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+
+    # intra-chunk (diagonal block): L[i,j] = exp(dA_cum_i - dA_cum_j) for i>=j
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (b,nc,q,q,h)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: exp of the masked (positive, potentially huge) upper
+    # triangle would be inf, and inf*0 in the VJP poisons gradients with NaN
+    L = jnp.exp(jnp.where(causal, seg, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                        scores, L, dtc, xc.astype(jnp.float32))
+
+    # chunk states: S_c = sum_j exp(dA_cum_last - dA_cum_j) * dt_j * B_j x_j^T
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,q,h)
+    states = jnp.einsum("bcjh,bcjh,bcjn,bcjhp->bchpn",
+                        decay_to_end, dtc, Bc, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (b,nc,h)
+
+    def scan_body(s_prev, inp):
+        s_c, decay_c = inp  # (b,h,p,n), (b,h)
+        s_new = s_prev * decay_c[:, :, None, None] + s_c
+        return s_new, s_prev  # emit the state *entering* this chunk
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, entering = jax.lax.scan(
+        scan_body, s0,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    entering = entering.swapaxes(0, 1)  # (b,nc,h,p,n)
+
+    # inter-chunk (low-rank) contribution: y_off = C_i exp(dA_cum_i) S_enter
+    in_decay = jnp.exp(dA_cum)  # (b,nc,q,h)
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, in_decay, entering)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), final_state
+
+
+def mamba2_block(p, x, cfg: Mamba2Config):
+    """Full-sequence (train / prefill) SSD block.  x: (b, l, d)."""
+    b, l, d = x.shape
+    z, xbc, dt = _split_proj(cfg, x @ p["in_proj"])
+    # depthwise causal conv over (x, B, C)
+    conv_in = jnp.pad(xbc, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
+    windows = jnp.stack(
+        [conv_in[:, i : i + l] for i in range(cfg.conv_width)], axis=-1)
+    xbc = jax.nn.silu(jnp.einsum("blcw,wc->blc", windows, p["conv"]))
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    xs = xbc[..., :di].reshape(b, l, h, cfg.head_dim)
+    B = xbc[..., di : di + n]
+    C = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, state = _ssd_chunked(xs, dt, p["A_log"], B, C, p["D"], cfg.chunk)
+    y = y.reshape(b, l, di)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], state
+
+
+def init_mamba2_cache(batch: int, cfg: Mamba2Config, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.d_state), dtype),
+    }
+
+
+def mamba2_decode_step(p, x, cache, cfg: Mamba2Config):
+    """O(1) recurrent step.  x: (b, 1, d) -> (y, new_cache)."""
+    b = x.shape[0]
+    z, xbc, dt = _split_proj(cfg, x[:, 0] @ p["in_proj"])  # (b, ...)
+    conv_window = jnp.concatenate(
+        [cache["conv"], xbc[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    xbc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_window.astype(jnp.float32),
+                   p["conv"].astype(jnp.float32)))
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    xs = xbc[..., :di].reshape(b, h, cfg.head_dim)
+    B = xbc[..., di : di + n]
+    C = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b, h)
+    decay = jnp.exp(dt * (-jnp.exp(p["A_log"]))[None, :])        # (b, h)
+    contrib = jnp.einsum("bh,bn,bhp->bhpn", dt, B, xs.astype(jnp.float32))
+    state = cache["ssm"] * decay[:, :, None, None] + contrib
+    y = jnp.einsum("bn,bhpn->bhp", C, state)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, di)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"])
+    out = (y.astype(x.dtype) @ p["out_proj"])[:, None, :]
+    return out, {"ssm": state, "conv": conv_window[:, 1:]}

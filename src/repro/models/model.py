@@ -1,0 +1,406 @@
+"""Unified model: init / forward / prefill / decode for every assigned
+architecture family (dense, moe, ssm, hybrid, audio-stub, vlm-stub).
+
+All families share one parameter layout convention:
+  params = {
+    'embed':  (vocab, d),
+    'layers': {...stacked on axis 0 for lax.scan...},
+    'shared_attn': {...}          # hybrid only (single, reused block)
+    'final_norm': (d,),
+  }
+The softmax head is tied to the embedding.
+
+Modality stubs (assignment: frontend is a STUB):
+  * audio ('embeds'): forward consumes precomputed frame embeddings
+    (B, L, d) + EnCodec-token targets.
+  * vlm ('prefix'): a patch-embedding prefix (B, prefix_len, d) is
+    concatenated in front of the text-token embeddings; loss masks the
+    prefix positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+
+PyTree = Any
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _attn_cfg(cfg: ArchConfig) -> L.AttentionConfig:
+    return L.AttentionConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.hd, qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta)
+
+
+def _moe_cfg(cfg: ArchConfig) -> MOE.MoeConfig:
+    m = cfg.moe
+    return MOE.MoeConfig(
+        d_model=cfg.d_model, num_experts=m.num_experts, top_k=m.top_k,
+        expert_d_ff=m.expert_d_ff, shared_experts=m.shared_experts,
+        group_size=m.group_size, capacity_factor=m.capacity_factor,
+        dispatch_dtype=m.dispatch_dtype)
+
+
+def _ssm_cfg(cfg: ArchConfig) -> M2.Mamba2Config:
+    s = cfg.ssm
+    return M2.Mamba2Config(
+        d_model=cfg.d_model, d_state=s.d_state, head_dim=s.head_dim,
+        expand=s.expand, conv_width=s.conv_width, chunk=s.chunk)
+
+
+# ----------------------------------------------------------------- init ----
+def init_params(cfg: ArchConfig, key: jax.Array) -> PyTree:
+    dt = _dtype(cfg)
+    k_embed, k_layers, k_shared, k_extra = jax.random.split(key, 4)
+    params: dict = {
+        "embed": L.init_embedding(k_embed, cfg.vocab, cfg.d_model, dt),
+        "final_norm": jnp.ones(cfg.d_model, jnp.float32),
+    }
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def init_dense_sub(k, d_ff):
+            k1, k2 = jax.random.split(k)
+            return {
+                "attn_norm": jnp.ones(cfg.d_model, jnp.float32),
+                "mlp_norm": jnp.ones(cfg.d_model, jnp.float32),
+                "attn": L.init_attention(k1, _attn_cfg(cfg), dt),
+                "mlp": L.init_mlp(k2, cfg.d_model, d_ff, dt),
+            }
+
+        def init_moe_sub(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "attn_norm": jnp.ones(cfg.d_model, jnp.float32),
+                "mlp_norm": jnp.ones(cfg.d_model, jnp.float32),
+                "attn": L.init_attention(k1, _attn_cfg(cfg), dt),
+                "moe": MOE.init_moe(k2, _moe_cfg(cfg), dt),
+            }
+
+        if cfg.moe is None:
+            params["layers"] = jax.vmap(
+                lambda k: init_dense_sub(k, cfg.d_ff))(layer_keys)
+        elif cfg.moe_every == 1:
+            params["layers"] = jax.vmap(init_moe_sub)(layer_keys)
+        else:
+            # interleaved MoE (llama4): superblocks of (moe_every-1) dense
+            # sub-layers followed by one MoE sub-layer
+            n_super = cfg.n_layers // cfg.moe_every
+            d_ff_dense = cfg.dense_d_ff or 2 * cfg.moe.expert_d_ff
+            sb_keys = jax.random.split(k_layers, n_super)
+
+            def init_super(k):
+                kd, km = jax.random.split(k)
+                dks = jax.random.split(kd, cfg.moe_every - 1)
+                return {
+                    "dense": jax.vmap(
+                        lambda kk: init_dense_sub(kk, d_ff_dense))(dks),
+                    "moe_sub": init_moe_sub(km),
+                }
+
+            params["layers"] = jax.vmap(init_super)(sb_keys)
+    elif cfg.family in ("ssm", "hybrid"):
+        def init_one(k):
+            return {
+                "norm": jnp.ones(cfg.d_model, jnp.float32),
+                "mamba": M2.init_mamba2(k, _ssm_cfg(cfg), dt),
+            }
+
+        params["layers"] = jax.vmap(init_one)(layer_keys)
+        if cfg.family == "hybrid":
+            k1, k2 = jax.random.split(k_shared)
+            params["shared_attn"] = {
+                "attn_norm": jnp.ones(cfg.d_model, jnp.float32),
+                "mlp_norm": jnp.ones(cfg.d_model, jnp.float32),
+                "attn": L.init_attention(k1, _attn_cfg(cfg), dt),
+                "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+            }
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# -------------------------------------------------------------- forward ----
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _dense_layer(cfg: ArchConfig, p, x, positions):
+    out, _ = L.attention(p["attn"], L.rms_norm(x, p["attn_norm"]),
+                         _attn_cfg(cfg), positions=positions,
+                         block_k=cfg.attn_block_k)
+    x = x + out
+    h = L.rms_norm(x, p["mlp_norm"])
+    if "moe" in p:
+        y, aux = MOE.moe_layer(p["moe"], h, _moe_cfg(cfg))
+    else:
+        y, aux = L.mlp(p["mlp"], h), jnp.float32(0)
+    return x + y, aux
+
+
+def _hybrid_shared_block(cfg: ArchConfig, p, x, positions):
+    out, _ = L.attention(p["attn"], L.rms_norm(x, p["attn_norm"]),
+                         _attn_cfg(cfg), positions=positions,
+                         block_k=cfg.attn_block_k)
+    x = x + out
+    return x + L.mlp(p["mlp"], L.rms_norm(x, p["mlp_norm"]))
+
+
+def forward(cfg: ArchConfig, params: PyTree, tokens: jax.Array | None = None,
+            embeds: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits, moe_aux_loss).
+
+    * text / moe / dense: ``tokens`` (B, L)
+    * audio stub: ``embeds`` (B, L, d) — logits over the EnCodec vocab
+    * vlm stub: ``tokens`` (B, L_txt) + ``embeds`` (B, prefix_len, d)
+    """
+    if cfg.modality == "embeds":
+        x = embeds.astype(_dtype(cfg))
+    elif cfg.modality == "prefix":
+        tok_x = L.embed(params["embed"], tokens)
+        x = jnp.concatenate([embeds.astype(tok_x.dtype), tok_x], axis=1)
+    else:
+        x = L.embed(params["embed"], tokens)
+    b, l, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        body = _remat(cfg, lambda x, p: _dense_layer(cfg, p, x, positions))
+
+        if cfg.moe is not None and cfg.moe_every > 1:
+            def super_body(carry, sb):
+                x, aux = carry
+
+                def inner(c, p):
+                    x, aux = c
+                    x, a = body(x, p)
+                    return (x, aux + a), None
+
+                (x, aux), _ = jax.lax.scan(inner, (x, aux), sb["dense"])
+                x, a = body(x, sb["moe_sub"])
+                return (x, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(super_body, (x, jnp.float32(0)),
+                                       params["layers"])
+        else:
+            def scan_body(carry, p):
+                x, aux = carry
+                x, a = body(x, p)
+                return (x, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.float32(0)),
+                                       params["layers"])
+    else:  # ssm / hybrid
+        ssm_cfg = _ssm_cfg(cfg)
+
+        def one_layer(x, p, idx):
+            h, _ = M2.mamba2_block(p["mamba"], L.rms_norm(x, p["norm"]),
+                                   ssm_cfg)
+            x = x + h
+            if cfg.family == "hybrid":
+                apply_attn = (idx % cfg.attn_every) == (cfg.attn_every - 1)
+                x = jax.lax.cond(
+                    apply_attn,
+                    lambda x: _hybrid_shared_block(
+                        cfg, params["shared_attn"], x, positions),
+                    lambda x: x,
+                    x)
+            return x
+
+        body = _remat(cfg, lambda x, pi: one_layer(x, pi[0], pi[1]))
+
+        def scan_body(x, pi):
+            return body(x, pi), None
+
+        x, _ = jax.lax.scan(
+            scan_body, x, (params["layers"], jnp.arange(cfg.n_layers)))
+        aux = jnp.float32(0)
+
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(params["embed"], x)
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch: dict,
+            aux_weight: float = 0.01):
+    """Next-token CE over token positions (prefix/embeds positions per
+    modality rules).  batch keys: tokens and/or embeds, targets, [mask]."""
+    logits, aux = forward(cfg, params, batch.get("tokens"),
+                          batch.get("embeds"))
+    targets = batch["targets"]
+    if cfg.modality == "prefix":
+        logits = logits[:, cfg.prefix_len :]
+    # shift: predict t+1 from <=t
+    ce = L.cross_entropy(logits[:, :-1], targets[:, 1:],
+                         batch.get("mask"))
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------- decode ---
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> PyTree:
+    """Static-shape decode state for all families."""
+    dt = jnp.dtype(cfg.kv_cache_dtype)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        kv = cfg.n_kv
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_seq, kv, cfg.hd), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, kv, cfg.hd), dt),
+        }
+    ssm = _ssm_cfg(cfg)
+    cache = {
+        "ssm": jnp.zeros((cfg.n_layers, batch, ssm.n_heads, ssm.head_dim,
+                          ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, ssm.conv_width - 1,
+                           ssm.d_inner + 2 * ssm.d_state), jnp.float32),
+    }
+    if cfg.family == "hybrid":
+        kdt = jnp.dtype(cfg.kv_cache_dtype)
+        n_apps = cfg.n_layers // cfg.attn_every
+        cache["k"] = jnp.zeros((n_apps, batch, max_seq, cfg.n_kv, cfg.hd),
+                               kdt)
+        cache["v"] = jnp.zeros((n_apps, batch, max_seq, cfg.n_kv, cfg.hd),
+                               kdt)
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, cache: PyTree,
+                tokens: jax.Array, cache_len: jax.Array):
+    """One-token decode with a static KV/state cache.
+
+    tokens: (B, 1) int32; cache_len: scalar int32 (current filled length).
+    Returns (logits (B, 1, vocab), new_cache).
+    """
+    x = L.embed(params["embed"], tokens)
+    b, l, _ = x.shape
+    positions = jnp.broadcast_to(cache_len + jnp.arange(l)[None], (b, l))
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def sub_decode(x, p, ck, cv):
+            h = L.rms_norm(x, p["attn_norm"])
+            out, (k_new, v_new) = L.attention(
+                p["attn"], h, _attn_cfg(cfg), positions=positions,
+                kv_cache=(ck, cv), cache_len=cache_len,
+                block_k=cfg.attn_block_k)
+            x = x + out
+            h = L.rms_norm(x, p["mlp_norm"])
+            if "moe" in p:
+                y, _ = MOE.moe_layer(p["moe"], h, _moe_cfg(cfg))
+            else:
+                y = L.mlp(p["mlp"], h)
+            return x + y, (k_new, v_new)
+
+        if cfg.moe is not None and cfg.moe_every > 1:
+            me = cfg.moe_every
+            n_super = cfg.n_layers // me
+            ck = cache["k"].reshape(n_super, me, *cache["k"].shape[1:])
+            cv = cache["v"].reshape(n_super, me, *cache["v"].shape[1:])
+
+            def super_body(x, layer):
+                sb, ck_s, cv_s = layer
+
+                def inner(x, sub):
+                    p, c1, c2 = sub
+                    x, (kn, vn) = sub_decode(x, p, c1, c2)
+                    return x, (kn, vn)
+
+                x, (kd, vd) = jax.lax.scan(
+                    inner, x, (sb["dense"], ck_s[: me - 1], cv_s[: me - 1]))
+                x, (km, vm) = sub_decode(x, sb["moe_sub"],
+                                         ck_s[me - 1], cv_s[me - 1])
+                k_new = jnp.concatenate([kd, km[None]], axis=0)
+                v_new = jnp.concatenate([vd, vm[None]], axis=0)
+                return x, (k_new, v_new)
+
+            x, (k_all, v_all) = jax.lax.scan(
+                super_body, x, (params["layers"], ck, cv))
+            new_cache = {
+                "k": k_all.reshape(cfg.n_layers, *cache["k"].shape[1:]),
+                "v": v_all.reshape(cfg.n_layers, *cache["v"].shape[1:]),
+            }
+        else:
+            def scan_body(x, layer):
+                p, c1, c2 = layer
+                return sub_decode(x, p, c1, c2)
+
+            x, (k_all, v_all) = jax.lax.scan(
+                scan_body, x, (params["layers"], cache["k"], cache["v"]))
+            new_cache = {"k": k_all, "v": v_all}
+    else:
+        ssm_cfg = _ssm_cfg(cfg)
+        n_apps = cfg.n_layers // cfg.attn_every if cfg.family == "hybrid" else 0
+
+        def scan_body(carry, layer):
+            x, k_apps, v_apps = carry
+            p, s_ssm, s_conv, idx = layer
+            h, new_state = M2.mamba2_decode_step(
+                p["mamba"], L.rms_norm(x, p["norm"]),
+                {"ssm": s_ssm, "conv": s_conv}, ssm_cfg)
+            x = x + h
+            if cfg.family == "hybrid":
+                app = idx // cfg.attn_every
+                apply_attn = (idx % cfg.attn_every) == (cfg.attn_every - 1)
+
+                def do_attn(op):
+                    x, k_apps, v_apps = op
+                    sp = params["shared_attn"]
+                    h = L.rms_norm(x, sp["attn_norm"])
+                    out, (k_new, v_new) = L.attention(
+                        sp["attn"], h, _attn_cfg(cfg), positions=positions,
+                        kv_cache=(k_apps[app], v_apps[app]),
+                        cache_len=cache_len, block_k=cfg.attn_block_k)
+                    x = x + out
+                    x = x + L.mlp(sp["mlp"], L.rms_norm(x, sp["mlp_norm"]))
+                    k_apps = jax.lax.dynamic_update_index_in_dim(
+                        k_apps, k_new, app, 0)
+                    v_apps = jax.lax.dynamic_update_index_in_dim(
+                        v_apps, v_new, app, 0)
+                    return x, k_apps, v_apps
+
+                x, k_apps, v_apps = jax.lax.cond(
+                    apply_attn, do_attn, lambda op: op,
+                    (x, k_apps, v_apps))
+            return (x, k_apps, v_apps), (new_state["ssm"],
+                                         new_state["conv"])
+
+        k0 = cache.get("k", jnp.zeros((0,)))
+        v0 = cache.get("v", jnp.zeros((0,)))
+        (x, k_all, v_all), (ssm_all, conv_all) = jax.lax.scan(
+            scan_body, (x, k0, v0),
+            (params["layers"], cache["ssm"], cache["conv"],
+             jnp.arange(cfg.n_layers)))
+        new_cache = {"ssm": ssm_all, "conv": conv_all}
+        if cfg.family == "hybrid":
+            new_cache["k"] = k_all
+            new_cache["v"] = v_all
+
+    x = L.rms_norm(x, params["final_norm"])
+    return L.unembed(params["embed"], x), new_cache
+
+
+def prefill(cfg: ArchConfig, params: PyTree, tokens: jax.Array,
+            max_seq: int):
+    """Prefill via chunked decode? No — full-sequence forward + cache fill.
+
+    For the dry-run's prefill shape we run the full forward (blockwise
+    attention keeps memory bounded) and return last-position logits; a
+    serving deployment would additionally materialize the KV cache, which
+    ``prefill_with_cache`` does for the attention families.
+    """
+    logits, _ = forward(cfg, params, tokens=tokens)
+    return logits[:, -1:]

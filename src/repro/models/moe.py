@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer — GShard-style grouped top-k routing with
+capacity, einsum dispatch/combine (TPU-native, all-to-all under expert
+parallelism via GSPMD), plus optional always-on shared experts
+(Qwen2-MoE: 4 shared + 60 routed top-4; Llama4: 1 shared + 128 routed top-1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    d_model: int
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    shared_experts: int = 0       # fused into one wide shared FFN
+    group_size: int = 512         # routing group (GShard 'S')
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    dispatch_dtype: str = "float32"  # hillclimb lever: bfloat16 halves bytes
+
+    @property
+    def capacity(self) -> int:
+        return max(1, math.ceil(self.group_size * self.top_k
+                                / self.num_experts * self.capacity_factor))
+
+
+def init_moe(key, cfg: MoeConfig, dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(k1, (d, e)) * s_in).astype(jnp.float32),
+        "w_in": (jax.random.normal(k2, (e, d, 2 * f)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k3, (e, f, d)) * s_out).astype(dtype),
+    }
+    if cfg.shared_experts:
+        p["shared"] = layers.init_mlp(k4, d, cfg.shared_experts * f, dtype)
+    return p
+
+
+def moe_layer(p, x: jax.Array, cfg: MoeConfig):
+    """x: (B, L, d) -> (y, aux_loss).
+
+    Routing is done in groups of ``group_size`` tokens; each expert accepts at
+    most ``capacity`` tokens per group (overflow dropped — standard GShard).
+    """
+    b, l, d = x.shape
+    tokens = b * l
+    # group size: prefer cfg.group_size; fall back to one group when the
+    # token count doesn't divide (e.g. single-token decode batches)
+    s = cfg.group_size if tokens % cfg.group_size == 0 else tokens
+    g = tokens // s
+    xg = x.reshape(g, s, d)
+    e, k = cfg.num_experts, cfg.top_k
+    c = max(1, math.ceil(s * k / e * cfg.capacity_factor))
+
+    logits = (xg.astype(jnp.float32) @ p["router"])  # (g, s, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k per token, sequential-greedy position assignment per expert
+    dispatch = jnp.zeros((g, s, e, c), cfg.dispatch_dtype)
+    combine = jnp.zeros((g, s, e, c), cfg.dispatch_dtype)
+    gates_remaining = probs
+    fill = jnp.zeros((g, e), jnp.int32)
+    for _ in range(k):
+        gate = gates_remaining.max(axis=-1)          # (g, s)
+        idx = gates_remaining.argmax(axis=-1)        # (g, s)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (g, s, e)
+        pos = fill[:, None, :] + jnp.cumsum(onehot, axis=1) - onehot
+        keep = (pos < c) & (onehot == 1)
+        pos_c = jax.nn.one_hot(jnp.where(keep, pos, c), c + 1,
+                               dtype=cfg.dispatch_dtype)[..., :c]
+        d_k = onehot.astype(cfg.dispatch_dtype)[..., None] * pos_c
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gate[..., None, None].astype(
+            cfg.dispatch_dtype)
+        fill = fill + onehot.sum(axis=1)
+        gates_remaining = gates_remaining * (1 - onehot.astype(jnp.float32))
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    me = probs.mean(axis=1)                                   # (g, e)
+    ce = dispatch.sum(axis=(1, 3)) / s                        # (g, e)
+    aux = (me * ce).sum(axis=-1).mean() * e
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch,
+                           xg.astype(cfg.dispatch_dtype))
+    w_in = p["w_in"]
+    gate_up = jnp.einsum("egcd,edf->egcf", expert_in.astype(w_in.dtype), w_in)
+    gate_h, up_h = jnp.split(gate_up, 2, axis=-1)
+    h = jax.nn.silu(gate_h) * up_h
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["w_out"])
+    y = jnp.einsum("gsec,egcd->gsd", combine,
+                   expert_out.astype(cfg.dispatch_dtype))
+    y = y.reshape(b, l, d).astype(x.dtype)
+    if "shared" in p:
+        y = y + layers.mlp(p["shared"], x)
+    return y, aux

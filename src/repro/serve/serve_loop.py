@@ -1,0 +1,140 @@
+"""Serving: prefill / decode step builders with sharded KV caches, plus a
+small batched-request engine (continuous-batching-lite) used by the serving
+example and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.train import sharding as S
+
+PyTree = Any
+
+
+def build_decode_step(cfg: ArchConfig, mesh: Mesh | None = None,
+                      shape: ShapeConfig | None = None) -> Callable:
+    """decode_step(params, cache, tokens, cache_len) -> (logits, cache)."""
+
+    def step(params, cache, tokens, cache_len):
+        return M.decode_step(cfg, params, cache, tokens, cache_len)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(1,))
+    params_shape = jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = S.param_specs(cfg, params_shape, mesh)
+    cspecs = S.cache_specs(cfg, shape, mesh)
+    bspec = S.batch_specs(cfg, shape, mesh)["tokens"]
+    return jax.jit(
+        step,
+        in_shardings=(S.to_shardings(mesh, pspecs),
+                      S.to_shardings(mesh, cspecs),
+                      NamedSharding(mesh, bspec),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, P(bspec[0], None, None)),
+                       S.to_shardings(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+
+
+def build_prefill(cfg: ArchConfig, mesh: Mesh | None = None,
+                  shape: ShapeConfig | None = None) -> Callable:
+    def step(params, tokens):
+        return M.prefill(cfg, params, tokens, max_seq=tokens.shape[1])
+
+    if mesh is None:
+        return jax.jit(step)
+    params_shape = jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = S.param_specs(cfg, params_shape, mesh)
+    bspec = S.batch_specs(cfg, shape, mesh)["tokens"]
+    return jax.jit(
+        step,
+        in_shardings=(S.to_shardings(mesh, pspecs),
+                      NamedSharding(mesh, bspec)),
+    )
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray         # (len,) int32
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchEngine:
+    """Minimal continuous-batching engine: fixed-slot decode batch; finished
+    slots are refilled from the queue; prompts are absorbed one token at a
+    time through the decode path (cached prefill)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_seq: int = 256, eos: int = 1):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_seq, self.eos = slots, max_seq, eos
+        self.cache = M.init_cache(cfg, slots, max_seq)
+        self.decode = jax.jit(
+            lambda p, c, t, l: M.decode_step(cfg, p, c, t, l))
+        self.active: list[Request | None] = [None] * slots
+        self.cursor = np.zeros(slots, np.int32)   # per-slot fill position
+        self.pending: list[Request] = []
+
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self.active[i] is None and self.pending:
+                self.active[i] = self.pending.pop(0)
+                self.cursor[i] = 0
+
+    def step(self):
+        """One engine tick: each active slot advances one token (prompt
+        absorption or generation).  Uses a shared cache_len = max cursor —
+        per-slot lengths are masked by attention's kv_valid_len."""
+        self._admit()
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            pos = int(self.cursor[i])
+            if pos < len(req.prompt):
+                tokens[i, 0] = req.prompt[pos]
+            elif req.generated:
+                tokens[i, 0] = req.generated[-1]
+        cache_len = int(self.cursor.max(initial=0))
+        logits, self.cache = self.decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.int32(cache_len))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.cursor[i] += 1
+            pos = int(self.cursor[i])
+            if pos >= len(req.prompt):
+                req.generated.append(int(nxt[i]))
+                if (int(nxt[i]) == self.eos
+                        or len(req.generated) >= req.max_new
+                        or pos >= self.max_seq - 1):
+                    req.done = True
+                    self.active[i] = None
+        return [r for r in [req for req in self.active] if r]
+
+    def run_until_done(self, max_ticks: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        all_reqs = list(self.pending)
+        for _ in range(max_ticks):
+            if not self.pending and all(a is None for a in self.active):
+                break
+            self.step()
+        return all_reqs

@@ -1,0 +1,187 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production
+mesh (pod, data, model).
+
+Conventions (DESIGN.md §5):
+  * 'model' (tensor/expert parallel): attention heads, FFN hidden, experts,
+    vocab.
+  * fsdp axes ('data', + 'pod' when multi-pod): the other matrix dimension
+    of every large weight (ZeRO-3-style), and the batch dimension of
+    activations.
+  * Optimizer moments follow their parameter's spec.
+
+Rules are name-based on the param path; stacked layer params get a leading
+``None`` (the scan axis is never sharded).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+PyTree = Any
+
+
+def fsdp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+# base (unstacked) rank of each named parameter; extra leading dims are scan
+# stack axes (1 for plain layers, 2 for llama4 superblock dense sub-layers)
+_BASE_NDIM = {
+    "embed": 2, "wq": 2, "wk": 2, "wv": 2, "wo": 2,
+    "w_gate": 2, "w_up": 2, "w_down": 2, "in_proj": 2, "out_proj": 2,
+    "router": 2, "w_in": 3, "w_out": 3, "conv": 2,
+}
+
+
+def _spec_for(name: str, fsdp) -> P | None:
+    if name == "embed":
+        return P("model", fsdp)                    # (vocab, d)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj"):
+        return P(fsdp, "model")                    # (d, hidden)
+    if name in ("wo", "w_down", "out_proj"):
+        return P("model", fsdp)                    # (hidden, d)
+    if name == "router":
+        return P(fsdp, None)                       # (d, E) small
+    if name == "w_in":
+        return P("model", fsdp, None)              # (E, d, 2f)
+    if name == "w_out":
+        return P("model", None, fsdp)              # (E, f, d)
+    if name == "conv":
+        return P(None, "model")                    # (w, channels)
+    return None
+
+
+def param_specs(cfg: ArchConfig, params: PyTree, mesh: Mesh) -> PyTree:
+    fsdp = fsdp_axes(mesh)
+
+    def assign(path_tuple, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "name", str(p))))
+                for p in path_tuple]
+        name = keys[-1]
+        base = _BASE_NDIM.get(name)
+        spec = _spec_for(name, fsdp)
+        if base is None or spec is None or leaf.ndim < base:
+            return P(*([None] * leaf.ndim))  # norms, scalars, unknowns
+        n_stack = leaf.ndim - base
+        return P(*([None] * n_stack), *spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def opt_state_specs(cfg: ArchConfig, opt_state: PyTree, pspecs: PyTree,
+                    mesh: Mesh) -> PyTree:
+    return {
+        "mu": pspecs,
+        "nu": pspecs,
+        "step": P(),
+    }
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    """Input shardings per shape kind."""
+    fsdp = fsdp_axes(mesh)
+    n_batch_shards = 1
+    if fsdp:
+        for a in fsdp:
+            n_batch_shards *= mesh.shape[a]
+    batch_axis = fsdp if shape.global_batch % max(n_batch_shards, 1) == 0 \
+        and shape.global_batch >= n_batch_shards else None
+    specs = {"tokens": P(batch_axis, None), "targets": P(batch_axis, None)}
+    if cfg.modality in ("embeds", "prefix"):
+        specs["embeds"] = P(batch_axis, None, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> PyTree:
+    """KV/state cache shardings for decode shapes.
+
+    batch >= data-shards: shard batch over fsdp axes, heads over 'model'.
+    batch == 1 (long-context): batch replicated, *sequence* sharded over the
+    fsdp axes (sequence parallelism for the KV cache), heads over 'model'.
+    """
+    fsdp = fsdp_axes(mesh)
+    n_batch_shards = 1
+    if fsdp:
+        for a in fsdp:
+            n_batch_shards *= mesh.shape[a]
+    seq_parallel = shape.global_batch < n_batch_shards
+    b_ax = None if seq_parallel else fsdp
+    s_ax = fsdp if seq_parallel else None
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        kv_spec = P(None, b_ax, s_ax, "model", None)  # (L, B, S, kv, hd)
+        return {"k": kv_spec, "v": kv_spec}
+    specs = {
+        "ssm": P(None, b_ax, "model", None, None),   # (L, B, h, p, n)
+        "conv": P(None, b_ax, None, "model"),        # (L, B, w, ch)
+    }
+    if cfg.family == "hybrid":
+        specs["k"] = P(None, b_ax, s_ax, "model", None)
+        specs["v"] = P(None, b_ax, s_ax, "model", None)
+    return specs
+
+
+def _axes_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def fix_specs(shapes: PyTree, specs: PyTree, mesh: Mesh) -> PyTree:
+    """Divisibility repair: drop mesh axes from dims they don't divide, then
+    try to re-place each dropped axis on another (larger, divisible) dim.
+
+    Handles e.g. kv=8 heads on a model=16 axis (moves the axis to head_dim),
+    vocab=92553 (drops 'model' from the vocab dim of the embedding), and
+    60-expert MoE on 16-way expert parallelism (moves 'model' to the FFN dim).
+    """
+
+    def fix(shape_leaf, spec):
+        dims = list(shape_leaf.shape)
+        parts = list(spec) + [None] * (len(dims) - len(spec))
+        dropped = []
+        for i, ax in enumerate(parts):
+            if ax is None:
+                continue
+            if dims[i] % _axes_size(mesh, ax) != 0:
+                dropped.append(ax)
+                parts[i] = None
+        for ax in dropped:
+            size = _axes_size(mesh, ax)
+            order = sorted(range(len(dims)), key=lambda i: -dims[i])
+            placed = False
+            for i in order:  # empty dims first
+                if parts[i] is None and dims[i] % size == 0 \
+                        and dims[i] >= size:
+                    parts[i] = ax
+                    placed = True
+                    break
+            if placed:
+                continue
+            for i in order:  # else combine with an occupied dim
+                if parts[i] is None:
+                    continue
+                cur = parts[i] if isinstance(parts[i], tuple) else (parts[i],)
+                new = cur + (ax if isinstance(ax, tuple) else (ax,))
+                if dims[i] % _axes_size(mesh, new) == 0:
+                    parts[i] = new
+                    break
+        return P(*parts)
+
+    return jax.tree.map(fix, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_shardings(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

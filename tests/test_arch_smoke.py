@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate a
+REDUCED config of the same family and run one forward + one train step + one
+decode step on CPU, asserting output shapes and no NaNs.  The FULL configs
+are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import ShapeConfig
+from repro.models import model as M
+from repro.train import optimizer as O
+from repro.train.train_loop import build_train_step
+from repro.data import synthetic
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+def _batch(cfg):
+    return jax.tree.map(
+        jnp.asarray,
+        synthetic.batch_for_step(cfg, SMOKE_SHAPE, synthetic.DataConfig(), 0))
+
+
+@pytest.mark.parametrize("name", configs.ASSIGNED)
+def test_arch_smoke(name):
+    full = configs.get(name)
+    cfg = full.reduced()
+    assert cfg.family == full.family
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    # forward: shapes + finiteness
+    logits, aux = M.forward(cfg, params, batch.get("tokens"),
+                            batch.get("embeds"))
+    txt_len = SMOKE_SHAPE.seq_len - (cfg.prefix_len
+                                     if cfg.modality == "prefix" else 0)
+    total = txt_len + (cfg.prefix_len if cfg.modality == "prefix" else 0)
+    assert logits.shape == (2, total, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one train step: loss finite and params updated
+    step = build_train_step(cfg, O.AdamWConfig(lr=1e-3))
+    opt = O.init_opt_state(params, O.AdamWConfig())
+    p2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt2["step"]) == 1
+
+    # one decode step with a KV/state cache
+    cache = M.init_cache(cfg, 2, 64)
+    lg, cache2 = M.decode_step(cfg, p2, cache,
+                               jnp.zeros((2, 1), jnp.int32), jnp.int32(0))
+    assert lg.shape == (2, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+@pytest.mark.parametrize("name", configs.ASSIGNED)
+def test_full_config_matches_assignment(name):
+    """The FULL configs carry exactly the assigned hyperparameters."""
+    cfg = configs.get(name)
+    expected = {
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "mamba2-370m": (48, 1024, None, None, 0, 50280),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 0, 151936),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 0, 202048),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    }[name]
+    l, d, h, kv, ff, v = expected
+    assert cfg.n_layers == l and cfg.d_model == d and cfg.vocab == v
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv == kv
+    assert cfg.d_ff == ff
+    if name == "qwen3-4b":
+        assert cfg.qk_norm
+    if name == "mamba2-370m":
+        assert cfg.ssm.d_state == 128 and cfg.family == "ssm"
+    if name == "zamba2-7b":
+        assert cfg.ssm.d_state == 64 and cfg.family == "hybrid"
+    if name == "qwen2-moe-a2.7b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k,
+                cfg.moe.shared_experts) == (60, 4, 4)
+    if name == "llama4-maverick-400b-a17b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k) == (128, 1)
+
+
+def test_param_counts_plausible():
+    """Analytic N in 6·N·D should land near the advertised model sizes."""
+    approx = {
+        "tinyllama-1.1b": (0.9e9, 1.4e9),
+        "stablelm-12b": (10e9, 14e9),
+        "mamba2-370m": (0.25e9, 0.55e9),
+        "llama4-maverick-400b-a17b": (320e9, 480e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = configs.get(name).param_count()
+        assert lo <= n <= hi, (name, n)
+    # MoE active < total
+    moe = configs.get("llama4-maverick-400b-a17b")
+    assert moe.active_param_count() < 0.2 * moe.param_count()

@@ -1,0 +1,74 @@
+"""BVSS construction tests — the paper's §3 data structure invariants."""
+import numpy as np
+import pytest
+
+from repro.core.bvss import Bvss, BvssConfig, build_bvss, bvss_to_dense
+from repro.core.graph import from_edges
+from repro.data import graphs
+
+
+def dense_adj_T(g):
+    a = np.zeros((g.n, g.n), dtype=bool)
+    a[g.dst, g.src] = True
+    return a
+
+
+@pytest.mark.parametrize("family", ["kron", "road", "rgg", "urand", "social"])
+def test_bvss_roundtrip(family):
+    g = graphs.make(family, scale=8, seed=1)
+    b = build_bvss(g)
+    assert (bvss_to_dense(b) == dense_adj_T(g)).all()
+
+
+@pytest.mark.parametrize("sigma,tau", [(8, 128), (8, 32), (4, 64), (2, 16)])
+def test_bvss_roundtrip_configs(sigma, tau):
+    g = graphs.make("kron", scale=7, seed=2)
+    b = build_bvss(g, BvssConfig(sigma=sigma, tau=tau))
+    assert (bvss_to_dense(b) == dense_adj_T(g)).all()
+
+
+def test_vss_load_balance_by_construction():
+    """Near-perfect balance: every VSS holds exactly tau slice slots; at most
+    one VSS per slice set is partially padded (paper §3.1)."""
+    g = graphs.make("kron", scale=9, seed=0)
+    b = build_bvss(g)
+    for s in range(b.num_sets):
+        lo, hi = int(b.real_ptrs[s]), int(b.real_ptrs[s + 1])
+        partial = 0
+        for v in range(lo, hi):
+            real = int((b.masks[v] != 0).sum())
+            assert real <= b.config.tau
+            if real < b.config.tau:
+                partial += 1
+        assert partial <= 1, "at most one partially-filled VSS per slice set"
+
+
+def test_virtual_real_maps_consistent():
+    g = graphs.make("urand", scale=8, seed=3)
+    b = build_bvss(g)
+    assert b.real_ptrs[0] == 0 and b.real_ptrs[-1] == b.num_vss
+    assert (np.diff(b.real_ptrs) >= 0).all()
+    for v in range(b.num_vss):
+        s = int(b.virtual_to_real[v])
+        assert b.real_ptrs[s] <= v < b.real_ptrs[s + 1]
+
+
+def test_empty_slice_sets_have_no_vss():
+    # star graph: only column 0 (and its slice set) has out-edges
+    g = from_edges([0] * 20, np.arange(1, 21), n=64)
+    b = build_bvss(g)
+    assert b.num_vss == 1  # all edges live in slice set 0
+    assert int(np.diff(b.real_ptrs).sum()) == 1
+
+
+def test_padding_row_ids_are_sentinel():
+    g = from_edges([0, 1], [1, 2], n=10)
+    b = build_bvss(g)
+    pad = b.masks == 0
+    assert (b.row_ids[pad] == b.n_pad).all()
+
+
+def test_compression_ratio_bounds():
+    g = graphs.make("kron", scale=8, seed=0)
+    b = build_bvss(g)
+    assert 0.0 < b.compression_ratio <= 1.0

@@ -1,0 +1,76 @@
+"""Distributed BFS/closeness — run in subprocesses with 8 host devices so the
+main pytest process keeps the default single-device view."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_in_devices(script: str, n_devices: int = 8) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+COMMON = textwrap.dedent("""
+    import json, numpy as np, jax
+    from repro.data import graphs
+    from repro.core.bvss import build_bvss
+    from repro.core import blest, distributed, ref_bfs
+""")
+
+
+@pytest.mark.slow
+def test_graph_parallel_replicated_v():
+    res = run_in_devices(COMMON + textwrap.dedent("""
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
+        g = graphs.make('kron', scale=8, seed=0)
+        bd = blest.to_device(build_bvss(g))
+        lv = distributed.bfs_graph_parallel(bd, 5, mesh)
+        ok = bool((lv == ref_bfs.bfs_levels(g, 5)).all())
+        print(json.dumps({"ok": ok}))
+    """))
+    assert res["ok"]
+
+
+@pytest.mark.slow
+def test_row_parallel_all_shard_counts():
+    res = run_in_devices(COMMON + textwrap.dedent("""
+        g = graphs.make('rgg', scale=8, seed=0)
+        b = build_bvss(g)
+        want = ref_bfs.bfs_levels(g, 0)
+        oks = []
+        for shards, shape in [(2, (4, 2)), (4, (2, 4)), (8, (1, 8))]:
+            mesh = jax.make_mesh(shape, ('data', 'model'))
+            rs = distributed.build_row_sharded(b, shards)
+            lv = distributed.bfs_row_parallel(rs, 0, mesh)
+            oks.append(bool((lv == want).all()))
+        print(json.dumps({"ok": all(oks)}))
+    """))
+    assert res["ok"]
+
+
+@pytest.mark.slow
+def test_source_parallel_closeness_multiaxis():
+    res = run_in_devices(COMMON + textwrap.dedent("""
+        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+        g = graphs.grid2d(8, 8)
+        bd = blest.to_device(build_bvss(g))
+        far, reach = distributed.closeness_source_parallel(
+            bd, mesh, ('pod', 'data'), kappa=8)
+        cc = distributed.closeness_from_far(g.n, far, reach)
+        want = ref_bfs.closeness_centrality(g)
+        print(json.dumps({"ok": bool(np.allclose(cc, want))}))
+    """))
+    assert res["ok"]

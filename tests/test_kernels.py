@@ -1,0 +1,126 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes/dtypes + hypothesis property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops, ref as kref
+
+
+def rand_masks(rng, n_v, tau):
+    return rng.integers(0, 256, (n_v, tau)).astype(np.uint8)
+
+
+# ---------------------------------------------------------------- pull_ss --
+@pytest.mark.parametrize("n_v,tau,block_v", [
+    (8, 128, 8), (64, 128, 16), (100, 128, 32), (256, 32, 256), (31, 128, 8),
+])
+def test_pull_ss_matches_ref(n_v, tau, block_v):
+    rng = np.random.default_rng(0)
+    masks = rand_masks(rng, n_v, tau)
+    alphas = rng.integers(0, 256, n_v).astype(np.uint8)
+    got = ops.pull_ss(jnp.asarray(masks), jnp.asarray(alphas), block_v=block_v)
+    want = kref.pull_ss_ref(jnp.asarray(masks), jnp.asarray(alphas))
+    assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_pull_ss_zero_alpha_no_marks():
+    rng = np.random.default_rng(1)
+    masks = rand_masks(rng, 16, 128)
+    marks = ops.pull_ss(jnp.asarray(masks), jnp.zeros(16, jnp.uint8))
+    assert int(np.asarray(marks).sum()) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 2**32 - 1))
+def test_pull_ss_packed_equals_bytes(n_v, seed):
+    """Property: the packed "optimal layout" and the byte layout agree."""
+    rng = np.random.default_rng(seed)
+    masks = rand_masks(rng, n_v, 128)
+    alphas = rng.integers(0, 256, n_v).astype(np.uint8)
+    packed = ops.pack_masks(jnp.asarray(masks))
+    marks_p = ops.pull_ss_packed(packed, jnp.asarray(alphas), block_v=8)
+    marks_b = ops.pull_ss(jnp.asarray(masks), jnp.asarray(alphas), block_v=8)
+    assert_allclose(np.asarray(ops.unpack_marks(marks_p)), np.asarray(marks_b))
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(2)
+    masks = (rand_masks(rng, 12, 128) & 1).astype(np.uint8)  # 0/1 bytes
+    packed = ops.pack_masks(jnp.asarray(masks))
+    assert_allclose(np.asarray(ops.unpack_marks(packed)), masks)
+
+
+# ---------------------------------------------------------------- pull_ms --
+@pytest.mark.parametrize("n_q,tau,kappa,num_sets", [
+    (4, 128, 128, 3), (7, 128, 256, 5), (1, 32, 128, 1), (16, 128, 8, 4),
+])
+def test_pull_ms_matches_ref(n_q, tau, kappa, num_sets):
+    rng = np.random.default_rng(3)
+    sigma = 8
+    masks = rand_masks(rng, n_q, tau)
+    f_planes = rng.integers(0, 2, (num_sets, sigma, kappa)).astype(np.uint8)
+    v2r = rng.integers(0, num_sets, n_q).astype(np.int32)
+    got = ops.pull_ms(jnp.asarray(masks), jnp.asarray(f_planes), jnp.asarray(v2r))
+    want = kref.pull_ms_ref(jnp.asarray(masks), jnp.asarray(f_planes[v2r]))
+    assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_pull_ms_is_popc_semiring():
+    """One slice with mask bit b set marks exactly the BFS columns where the
+    parent set's row b is in the frontier."""
+    sigma, tau, kappa = 8, 128, 128
+    masks = np.zeros((1, tau), np.uint8)
+    masks[0, 0] = 0b00000100  # slice 0 connects to column 2 of its set
+    f = np.zeros((1, sigma, kappa), np.uint8)
+    f[0, 2, 5] = 1  # column 2 is in the frontier for BFS 5 only
+    got = np.array(ops.pull_ms(jnp.asarray(masks), jnp.asarray(f),
+                               jnp.zeros(1, jnp.int32)))
+    assert got[0, 0, 5] == 1
+    got[0, 0, 5] = 0
+    assert got.sum() == 0
+
+
+# --------------------------------------------------------- frontier_sweep --
+@pytest.mark.parametrize("n_pad,block_n", [(64, 32), (4096, 2048), (1000, 256),
+                                           (8, 8)])
+def test_frontier_sweep_matches_ref(n_pad, block_n):
+    n_pad = ((n_pad + 7) // 8) * 8
+    rng = np.random.default_rng(4)
+    v_curr = rng.integers(0, 2, n_pad).astype(np.uint8)
+    v_next = np.maximum(v_curr, rng.integers(0, 2, n_pad).astype(np.uint8))
+    level = np.full(n_pad, np.iinfo(np.int32).max, np.int32)
+    level[v_curr == 1] = 1
+    got = ops.frontier_sweep(jnp.asarray(v_curr), jnp.asarray(v_next),
+                             jnp.asarray(level), 2, block_n=block_n)
+    want = kref.frontier_sweep_ref(jnp.asarray(v_curr), jnp.asarray(v_next),
+                                   jnp.asarray(level), 2)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 2**32 - 1))
+def test_frontier_sweep_properties(num_sets, seed):
+    """Properties: monotone visited, level set exactly on diff, words match
+    bit semantics."""
+    sigma = 8
+    n_pad = num_sets * sigma
+    rng = np.random.default_rng(seed)
+    v_curr = rng.integers(0, 2, n_pad).astype(np.uint8)
+    v_next = np.maximum(v_curr, rng.integers(0, 2, n_pad).astype(np.uint8))
+    level = rng.integers(0, 5, n_pad).astype(np.int32)
+    ell = 7
+    v_new, level_new, f_words, active = (
+        np.asarray(x) for x in ops.frontier_sweep(
+            jnp.asarray(v_curr), jnp.asarray(v_next), jnp.asarray(level), ell)
+    )
+    diff = v_next & (1 - v_curr)
+    assert (v_new == v_next).all()
+    assert (level_new[diff == 1] == ell).all()
+    assert (level_new[diff == 0] == level[diff == 0]).all()
+    want_words = (diff.reshape(-1, sigma) * (1 << np.arange(sigma))).sum(-1)
+    assert (f_words == want_words.astype(np.uint8)).all()
+    assert (active == (want_words != 0)).all()

@@ -1,0 +1,116 @@
+"""MS-BFS (Alg. 5) and closeness correctness."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import blest, closeness, msbfs, ref_bfs
+from repro.core.bvss import build_bvss
+from repro.data import graphs
+
+
+@pytest.fixture(scope="module")
+def kron():
+    g = graphs.make("kron", scale=8, seed=0)
+    return g, blest.to_device(build_bvss(g))
+
+
+def test_msbfs_equals_independent_ssbfs(kron):
+    g, bd = kron
+    srcs = np.array([0, 3, 17, 40, 99, 120, 7, 64], np.int32)
+    st = msbfs.msbfs_fused(bd, jnp.asarray(srcs), track_levels=True)
+    want = ref_bfs.multi_source_levels(g, srcs)
+    assert (np.asarray(st.levels)[: g.n].T == want).all()
+
+
+def test_msbfs_bucketed_equals_fused(kron):
+    g, bd = kron
+    srcs = np.array([5, 9, 77, 0], np.int32)
+    fused = msbfs.msbfs_fused(bd, jnp.asarray(srcs), track_levels=True)
+    bucketed = msbfs.BucketedMsBfs(bd, track_levels=True)(jnp.asarray(srcs))
+    assert (np.asarray(fused.levels) == np.asarray(bucketed.levels)).all()
+    assert (np.asarray(fused.far) == np.asarray(bucketed.far)).all()
+
+
+def test_msbfs_padding_sources_inert(kron):
+    g, bd = kron
+    srcs = np.array([4, -1, -1, 11], np.int32)
+    st = msbfs.msbfs_fused(bd, jnp.asarray(srcs), track_levels=True)
+    lv = np.asarray(st.levels)[: g.n]
+    assert (lv[:, 1] == blest.UNREACHED).all()
+    assert (lv[:, 2] == blest.UNREACHED).all()
+    assert (lv[:, 0] == ref_bfs.bfs_levels(g, 4)).all()
+
+
+def test_far_accumulates_distances(kron):
+    g, bd = kron
+    srcs = np.array([0, 9], np.int32)
+    st = msbfs.msbfs_fused(bd, jnp.asarray(srcs))
+    lv = ref_bfs.multi_source_levels(g, srcs)
+    reached = lv != ref_bfs.UNREACHED
+    want_far = np.where(reached, lv, 0).sum(axis=0)
+    assert (np.asarray(st.far)[: g.n] == want_far).all()
+    assert (np.asarray(st.reach)[: g.n] == reached.sum(axis=0)).all()
+
+
+@pytest.mark.parametrize("kappa", [8, 32])
+def test_closeness_matches_oracle(kappa):
+    g = graphs.grid2d(6, 7)
+    bd = blest.to_device(build_bvss(g))
+    cc = closeness.closeness(bd, kappa=kappa)
+    np.testing.assert_allclose(cc, ref_bfs.closeness_centrality(g),
+                               rtol=1e-12)
+
+
+def test_closeness_matches_networkx():
+    import networkx as nx
+
+    g = graphs.small_world(60, k=4, p=0.2, seed=3)
+    bd = blest.to_device(build_bvss(g))
+    cc = closeness.closeness(bd, kappa=16)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.n))
+    G.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+    # networkx closeness uses incoming distances; our far[u] = sum_s d(s, u)
+    want = np.array([
+        nx.closeness_centrality(G, u, wf_improved=False) * (g.n - 1)
+        for u in range(g.n)
+    ])
+    # classic closeness: (n-1)/far; nx classic: (reach-1)/far
+    far = np.zeros(g.n)
+    reach = np.zeros(g.n)
+    for s in range(g.n):
+        lv = ref_bfs.bfs_levels(g, s)
+        m = lv != ref_bfs.UNREACHED
+        far += np.where(m, lv, 0)
+        reach += m
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ours_expected = np.where(far > 0, (g.n - 1) / far, 0.0)
+    np.testing.assert_allclose(cc, ours_expected, rtol=1e-9)
+
+
+def test_closeness_component_normalization():
+    # two disjoint cliques
+    import numpy as np
+    from repro.core.graph import from_edges
+
+    edges = []
+    for block in (range(0, 4), range(4, 8)):
+        for i in block:
+            for j in block:
+                if i != j:
+                    edges.append((i, j))
+    s, d = zip(*edges)
+    g = from_edges(list(s), list(d), n=8)
+    bd = blest.to_device(build_bvss(g))
+    cc = closeness.closeness(bd, kappa=8, normalize="component")
+    # within a 4-clique: far = 3, reach = 4 -> (4-1)^2/((8-1)*3) = 3/7
+    np.testing.assert_allclose(cc, np.full(8, 9 / 21), rtol=1e-12)
+
+
+def test_get_vi_bijection():
+    sigma, rho = 8, 5
+    u = jnp.arange(sigma * rho)
+    vi = msbfs.get_vi(u, rho, sigma)
+    assert sorted(np.asarray(vi).tolist()) == list(range(sigma * rho))
+    back = msbfs.get_vi_inverse(vi, rho, sigma)
+    assert (np.asarray(back) == np.asarray(u)).all()

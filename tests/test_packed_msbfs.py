@@ -1,0 +1,105 @@
+"""Packed kappa-bit MS-BFS path (§Perf cell-1 iteration 4): scatter-OR
+kernel, packed pull kernel, end-to-end equivalence with the byte-plane
+pipeline."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_array_equal
+
+from repro.core import blest, msbfs, msbfs_packed
+from repro.core.bvss import build_bvss
+from repro.data import graphs
+from repro.kernels.pull_ms_packed import pull_ms_packed, pull_ms_packed_ref
+from repro.kernels.scatter_or import scatter_or, scatter_or_ref
+
+
+# ------------------------------------------------------------- scatter_or --
+@pytest.mark.parametrize("n,t,words", [(32, 64, 8), (8, 100, 4), (128, 16, 8),
+                                       (4, 4, 1)])
+def test_scatter_or_matches_ref(n, t, words):
+    rng = np.random.default_rng(1)
+    dest = rng.integers(0, 2**32, (n, words), dtype=np.uint32)
+    rows = rng.integers(0, n, t).astype(np.int32)
+    marks = rng.integers(0, 2**32, (t, words), dtype=np.uint32)
+    got = scatter_or(jnp.asarray(dest), jnp.asarray(rows),
+                     jnp.asarray(marks), interpret=True)
+    want = scatter_or_ref(jnp.asarray(dest), jnp.asarray(rows),
+                          jnp.asarray(marks))
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_scatter_or_duplicates_accumulate(seed):
+    """All elements hitting ONE row must OR together (the REDG semantics)."""
+    rng = np.random.default_rng(seed)
+    t = 10
+    dest = np.zeros((4, 2), np.uint32)
+    rows = np.zeros(t, np.int32)  # all duplicates
+    marks = rng.integers(0, 2**32, (t, 2), dtype=np.uint32)
+    got = np.asarray(scatter_or(jnp.asarray(dest), jnp.asarray(rows),
+                                jnp.asarray(marks), interpret=True))
+    want = np.bitwise_or.reduce(marks, axis=0)
+    assert_array_equal(got[0], want)
+    assert (got[1:] == 0).all()
+
+
+# --------------------------------------------------------- pull_ms_packed --
+@pytest.mark.parametrize("n_q,tau,kw,num_sets", [(4, 128, 4, 3), (7, 32, 1, 5),
+                                                 (1, 128, 8, 1)])
+def test_pull_ms_packed_matches_ref(n_q, tau, kw, num_sets):
+    rng = np.random.default_rng(2)
+    masks = rng.integers(0, 256, (n_q, tau)).astype(np.uint8)
+    f = rng.integers(0, 2**32, (num_sets, 8, kw), dtype=np.uint32)
+    v2r = rng.integers(0, num_sets, n_q).astype(np.int32)
+    got = pull_ms_packed(jnp.asarray(masks), jnp.asarray(f),
+                         jnp.asarray(v2r), interpret=True)
+    want = pull_ms_packed_ref(jnp.asarray(masks), jnp.asarray(f[v2r]))
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pull_ms_packed_equals_byteplane_pull():
+    """The packed pull must agree with the MXU byte-plane pull bit-for-bit."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(3)
+    n_q, tau, kappa, num_sets = 6, 128, 64, 4
+    masks = rng.integers(0, 256, (n_q, tau)).astype(np.uint8)
+    f_bytes = rng.integers(0, 2, (num_sets, 8, kappa)).astype(np.uint8)
+    v2r = rng.integers(0, num_sets, n_q).astype(np.int32)
+    marks_b = np.asarray(ops.pull_ms(jnp.asarray(masks), jnp.asarray(f_bytes),
+                                     jnp.asarray(v2r)))
+    # pack the frontier planes and pull packed
+    shifts = np.arange(32, dtype=np.uint32)
+    f_packed = (f_bytes.reshape(num_sets, 8, kappa // 32, 32).astype(np.uint32)
+                << shifts).sum(-1).astype(np.uint32)
+    marks_p = np.asarray(pull_ms_packed(
+        jnp.asarray(masks), jnp.asarray(f_packed), jnp.asarray(v2r),
+        interpret=True))
+    unpacked = ((marks_p[:, :, :, None] >> shifts) & 1).astype(np.uint8)
+    assert_array_equal(unpacked.reshape(n_q, tau, kappa), marks_b)
+
+
+# ---------------------------------------------------------- end-to-end -----
+@pytest.mark.parametrize("family", ["kron", "road"])
+def test_packed_msbfs_equals_byteplane(family):
+    g = graphs.make(family, scale=7, seed=0)
+    bd = blest.to_device(build_bvss(g))
+    srcs = np.full(32, -1, np.int32)
+    srcs[:6] = [0, 3, 17, 40, 99, 64]
+    st_ref = msbfs.msbfs_fused(bd, jnp.asarray(srcs), use_pallas=False)
+    v, far, reach = msbfs_packed.PackedMsBfs(bd).run(srcs)
+    v_bytes = np.asarray(msbfs_packed.unpack_levels_check(v, 32))
+    assert_array_equal(v_bytes, np.asarray(st_ref.v_curr))
+    assert_array_equal(np.asarray(far), np.asarray(st_ref.far))
+    assert_array_equal(np.asarray(reach), np.asarray(st_ref.reach))
+
+
+def test_packed_state_is_8x_smaller():
+    g = graphs.make("kron", scale=7, seed=0)
+    bd = blest.to_device(build_bvss(g))
+    kappa = 64
+    byte_plane = bd.n_ext * kappa          # uint8 per (vertex, bfs)
+    packed = bd.n_ext * (kappa // 32) * 4  # uint32 words
+    assert byte_plane == 8 * packed

@@ -1,0 +1,90 @@
+"""Reordering (paper §4): Alg. 1, RCM, classifier, U_div — plus the paper's
+Table-1-style claims as assertions."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reorder, ref_bfs
+from repro.core.bvss import build_bvss
+from repro.core.graph import from_edges
+from repro.data import graphs
+
+
+@pytest.mark.parametrize("algo", ["jaccard", "rcm", "random", "natural"])
+def test_perm_is_bijection(algo):
+    g = graphs.make("kron", scale=8, seed=0)
+    res = reorder.reorder(g, force=algo)
+    assert sorted(res.perm.tolist()) == list(range(g.n))
+
+
+@pytest.mark.parametrize("family", ["road", "delaunay", "rgg"])
+def test_rcm_reduces_update_divergence(family):
+    """Table 1: RCM dramatically tightens row-id clustering within VSSs."""
+    g = graphs.make(family, scale=10, seed=0)
+    before = reorder.update_divergence(build_bvss(g.permuted(
+        reorder.reorder(g, force="random", seed=7).perm)))
+    after = reorder.update_divergence(build_bvss(g.permuted(
+        reorder.rcm(g))))
+    assert after < before / 2, (family, before, after)
+
+
+def test_jaccard_improves_compression_on_scale_free():
+    """Fig. 4 claim: JaccardWithWindows raises the compression ratio."""
+    g = graphs.make("kron", scale=9, seed=1)
+    base = build_bvss(g).compression_ratio
+    perm = reorder.jaccard_with_windows(g, window=512)
+    improved = build_bvss(g.permuted(perm)).compression_ratio
+    assert improved > base
+
+
+def test_jaccard_window_monotone_tendency():
+    """Fig. 4: larger W -> no worse compression (concave-down trend).
+    Checked loosely: max window beats the smallest."""
+    g = graphs.make("kron", scale=8, seed=2)
+    small = build_bvss(
+        g.permuted(reorder.jaccard_with_windows(g, window=8))
+    ).compression_ratio
+    large = build_bvss(
+        g.permuted(reorder.jaccard_with_windows(g, window=1024))
+    ).compression_ratio
+    assert large >= small * 0.95  # allow noise, but no collapse
+
+
+def test_scale_free_classifier():
+    assert reorder.is_scale_free_like(graphs.make("kron", scale=9))
+    assert not reorder.is_scale_free_like(graphs.make("road", scale=9))
+
+
+def test_window_must_divide_sigma():
+    g = graphs.make("kron", scale=6)
+    with pytest.raises(ValueError):
+        reorder.jaccard_with_windows(g, sigma=8, window=12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["kron", "road"]))
+def test_reordering_preserves_bfs_levels_multiset(seed, family):
+    """Property: relabelling must not change BFS semantics — the level of a
+    vertex is invariant under any bijection applied consistently."""
+    g = graphs.make(family, scale=6, seed=seed % 100)
+    res = reorder.reorder(g, force="random", seed=seed)
+    gp = g.permuted(res.perm)
+    src = seed % g.n
+    lv = ref_bfs.bfs_levels(g, src)
+    lv_p = ref_bfs.bfs_levels(gp, int(res.perm[src]))
+    assert (lv_p[res.perm] == lv).all()
+
+
+def test_update_divergence_zero_for_clustered_rows():
+    # a path graph in natural order: rows within a VSS are consecutive
+    n = 64
+    g = from_edges(np.arange(n - 1), np.arange(1, n), n=n)
+    u = reorder.update_divergence(build_bvss(g))
+    assert u < 2.0
+
+
+def test_rcm_reverses_and_orders_by_degree():
+    # star + path: RCM must produce a valid bijection and finish
+    g = from_edges([0, 0, 0, 1, 4], [1, 2, 3, 4, 5], n=6)
+    perm = reorder.rcm(g)
+    assert sorted(perm.tolist()) == list(range(6))

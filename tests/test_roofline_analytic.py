@@ -1,0 +1,120 @@
+"""Roofline tooling: HLO collective parsing (loop-aware), analytic cost
+model sanity, config override hook, sharding spec repair."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.launch import analytic as A
+from repro.launch import roofline as R
+
+
+def test_shape_bytes():
+    assert R.shape_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert R.shape_bytes("f32[2,2] u8[4]") == 16 + 4
+    assert R.shape_bytes("s32[]") == 4
+
+
+def test_parse_collectives_loop_aware():
+    hlo = """
+region_body.1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %x = f32[8]{0} all-reduce(f32[8]{0} %y), replica_groups={}
+}
+
+region_cond.2 (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(12)
+  %cmp = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %g = f32[16]{0} all-gather(f32[8]{0} %a), dimensions={0}
+  %w = (s32[], f32[8]) while((s32[], f32[8]) %t), condition=%region_cond.2, body=%region_body.1
+}
+"""
+    st = R.parse_collectives(hlo)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 12  # 1 site x trip 12
+    assert st.result_bytes["all-reduce"] == 12 * 32
+    # wire: all-reduce x2 factor, all-gather x1
+    assert st.wire_bytes == 12 * 32 * 2 + 64
+
+
+def test_roofline_terms_dominance():
+    t = R.roofline_terms(flops=197e12 * 256, bytes_accessed=1.0,
+                         collective_wire_bytes=1.0, chips=256)
+    assert t["dominant"] == "compute" and abs(t["compute_s"] - 1.0) < 1e-9
+    t = R.roofline_terms(1.0, 819e9 * 256, 1.0, 256)
+    assert t["dominant"] == "memory"
+    t = R.roofline_terms(1.0, 1.0, 50e9 * 256, 256)
+    assert t["dominant"] == "collective"
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED)
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_analytic_cost_positive_and_ordered(arch, shape):
+    cfg = configs.get(arch)
+    c = A.cell_cost(cfg, SHAPES[shape])
+    assert c.flops > 0 and c.hbm_bytes > 0
+    # decode flops must be far below train flops
+    if shape == "decode_32k":
+        t = A.cell_cost(cfg, SHAPES["train_4k"])
+        assert c.flops < t.flops / 100
+
+
+def test_analytic_train_flops_near_6nd():
+    """Dense train flops must be within ~2.5x of 6ND (attention + remat)."""
+    for arch in ("tinyllama-1.1b", "stablelm-3b"):
+        cfg = configs.get(arch)
+        shape = SHAPES["train_4k"]
+        six_nd = 6 * cfg.param_count() * shape.global_batch * shape.seq_len
+        got = A.cell_cost(cfg, shape).flops
+        assert six_nd < got < 3.0 * six_nd, (arch, six_nd, got)
+
+
+def test_fp8_kv_cache_halves_cache_bytes():
+    import dataclasses
+
+    cfg = configs.get("stablelm-12b")
+    base = A.cell_cost(cfg, SHAPES["decode_32k"]).detail["cache_bytes"]
+    fp8 = A.cell_cost(dataclasses.replace(cfg,
+                                          kv_cache_dtype="float8_e4m3fn"),
+                      SHAPES["decode_32k"]).detail["cache_bytes"]
+    assert fp8 == base / 2
+
+
+def test_apply_overrides_nested():
+    from repro.launch.dryrun import apply_overrides
+
+    cfg = configs.get("llama4-maverick-400b-a17b")
+    out = apply_overrides(cfg, "remat=dots;moe.dispatch_dtype=bfloat16")
+    assert out.remat == "dots" and out.moe.dispatch_dtype == "bfloat16"
+    assert cfg.remat == "full"  # original untouched (frozen dataclass)
+
+
+def test_fix_specs_repairs_indivisible_dims():
+    from repro.train import sharding as Sh
+
+    mesh = jax.make_mesh((1,), ("model",))  # sizes read via mesh.shape
+    # fake a 16-way model axis via explicit helper check instead:
+    class FakeMesh:
+        shape = {"model": 16, "data": 2}
+    fm = FakeMesh()
+    sds = jax.ShapeDtypeStruct((92553, 6144), jnp.bfloat16)
+    fixed = Sh.fix_specs(sds, P("model", ("data",)), fm)
+    # vocab 92553 % 16 != 0 -> 'model' must move to the divisible dim
+    assert fixed[0] is None or fixed[0] == ("data",)
+    assert "model" in jax.tree.leaves(tuple(fixed)) or fixed[1] == "model"
+
+
+def test_bfs_cell_cost_ladder():
+    n, nv, tau, sigma = 1 << 20, 1 << 16, 128, 8
+    base = A.bfs_cell_cost("msbfs_level", n, nv, tau, sigma)
+    k64 = A.bfs_cell_cost("msbfs_k64", n, nv, tau, sigma)
+    q = A.bfs_cell_cost("msbfs_queued", n, nv, tau, sigma)
+    # per-BFS bytes must improve down the ladder
+    per_bfs = lambda c, k: c.hbm_bytes / k
+    assert per_bfs(k64, 64) < per_bfs(base, 16)
+    assert q.hbm_bytes < base.hbm_bytes

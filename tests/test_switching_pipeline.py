@@ -1,0 +1,77 @@
+"""Switching policy (Eq. 6), pipeline facade, BRS baseline."""
+import numpy as np
+import pytest
+
+from repro.core import blest, brs_baseline, pipeline, ref_bfs, switching
+from repro.core.bvss import build_bvss
+from repro.data import graphs
+
+
+def test_decide_mode_eq6():
+    assert switching.decide_mode(unvisited=5, queue_len=1) == "dense"
+    assert switching.decide_mode(unvisited=500, queue_len=1) == "queued"
+    assert switching.decide_mode(9, 1, eta=10.0) == "dense"
+    assert switching.decide_mode(10, 1, eta=10.0) == "queued"
+
+
+def test_per_level_analysis_shapes():
+    g = graphs.make("kron", scale=7, seed=0)
+    bd = blest.to_device(build_bvss(g))
+    out = switching.per_level_analysis(bd, 0)
+    assert 0.0 <= out["misclassification_rate"] <= 1.0
+    assert out["speedup_optimal_over_blest"] >= 0.99
+    for row in out["rows"]:
+        assert row["optimal_s"] <= max(row["top_down_s"], row["bottom_up_s"])
+
+
+def test_probe_switching_returns_decision():
+    g = graphs.make("kron", scale=7, seed=1)
+    bd = blest.to_device(build_bvss(g))
+    d = switching.probe_switching_benefit(bd, runs=2)
+    assert isinstance(d.enabled, bool)
+    assert d.time_with > 0 and d.time_without > 0
+
+
+@pytest.mark.parametrize("family", ["kron", "road"])
+def test_pipeline_end_to_end(family):
+    g = graphs.make(family, scale=8, seed=0)
+    bl = pipeline.Blest.preprocess(g)
+    want = ref_bfs.bfs_levels(g, 3)
+    assert (bl.bfs(3) == want).all()
+    assert (bl.bfs(3, mode="bucketed") == want).all()
+    ms = bl.msbfs(np.array([3, 11]))
+    assert (ms[0] == want).all()
+    # stats populated
+    assert bl.stats.algorithm in ("jaccard", "rcm")
+    assert bl.stats.bvss_s >= 0 and bl.stats.reorder_s >= 0
+
+
+def test_pipeline_dispatch_matches_paper_rules():
+    g_sf = graphs.make("kron", scale=8, seed=0)
+    bl = pipeline.Blest.preprocess(g_sf)
+    assert bl.stats.scale_free and bl.stats.algorithm == "jaccard"
+    g_road = graphs.make("road", scale=8, seed=0)
+    bl2 = pipeline.Blest.preprocess(g_road)
+    assert not bl2.stats.scale_free and bl2.stats.algorithm == "rcm"
+    # lazy dispatch on the U_div threshold
+    assert bl2.stats.lazy == (bl2.stats.u_div > switching.UDIV_LAZY_THRESHOLD)
+
+
+def test_brs_baseline_correct_and_imbalanced():
+    g = graphs.make("kron", scale=8, seed=1)
+    brs = brs_baseline.build_brs(build_bvss(g))
+    assert (np.asarray(brs_baseline.bfs_brs(brs, 0))
+            == ref_bfs.bfs_levels(g, 0)).all()
+    m = brs_baseline.work_metrics(brs)
+    # skewed degree distribution -> padding blowup > 1 (the imbalance BLEST
+    # fixes by construction)
+    assert m["imbalance_factor"] > 1.5
+    assert m["unpacked_words_per_slice"] == 8
+
+
+def test_pipeline_closeness_small():
+    g = graphs.grid2d(5, 5)
+    bl = pipeline.Blest.preprocess(g)
+    cc = bl.closeness(kappa=8)
+    np.testing.assert_allclose(cc, ref_bfs.closeness_centrality(g),
+                               rtol=1e-12)
