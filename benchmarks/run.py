@@ -23,6 +23,7 @@ TABLES = [
     "fig5_eta_sweep",
     "triangles_bench",
     "closeness_bench",
+    "serve_throughput",
 ]
 
 

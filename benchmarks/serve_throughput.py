@@ -1,0 +1,78 @@
+"""Serving throughput: batched BFS engine vs a serial one-BFS-per-call loop.
+
+Fixed request stream (256 random sources on the synthetic bench kron graph);
+the serial baseline answers them one fused single-source BFS at a time, the
+engine packs them into kappa concurrent MS-BFS lanes with mid-flight
+admission.  Rows report queries/sec per configuration plus the speedup over
+serial; every engine result is checked bit-identical to the CPU oracle
+before its row is printed (a wrong result disqualifies the run).
+
+Expected shape (acceptance bar of the engine PR): throughput grows with
+kappa, and kappa=32 is >= 4x the serial loop.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import blest, ref_bfs
+from repro.core.bvss import build_bvss
+from repro.data import graphs
+
+from benchmarks import common
+
+REQUESTS = 256
+KAPPAS = (32, 64, 128)
+
+
+def main():
+    g = graphs.make("kron", scale=common.BENCH_SCALE, seed=1)
+    rng = np.random.default_rng(0)
+    cands = np.nonzero(g.out_degree > 0)[0]
+    srcs = rng.choice(cands, size=REQUESTS, replace=True)
+    oracle = {int(s): ref_bfs.bfs_levels(g, int(s)) for s in set(map(int, srcs))}
+
+    # ---- serial baseline: one fused BFS per call --------------------------
+    bd = blest.to_device(build_bvss(g))
+    serial = blest.FusedBfs(bd, use_pallas=False)
+    jax.block_until_ready(serial(int(srcs[0])))  # compile
+    t0 = time.perf_counter()
+    for s in srcs:
+        lv = serial(int(s))
+    jax.block_until_ready(lv)
+    t_serial = time.perf_counter() - t0
+    print(common.csv_row("serve_serial_1bfs_per_call",
+                         t_serial / REQUESTS * 1e6,
+                         f"qps={REQUESTS / t_serial:.1f}"))
+
+    # ---- batched engine, kappa sweep --------------------------------------
+    from repro.serve.bfs_engine import BfsEngine
+
+    for kappa in KAPPAS:
+        eng = BfsEngine(kappa=kappa, layout="auto", reorder="natural")
+        eng.register_graph("bench", g)
+        eng.submit("bench", int(srcs[0]))
+        eng.run()  # build artifacts + compile outside the timed region
+        for s in srcs:
+            eng.submit("bench", int(s))
+        t0 = time.perf_counter()
+        results = eng.run()
+        dt = time.perf_counter() - t0
+        for r in results.values():
+            assert (r.levels == oracle[r.source]).all(), \
+                f"engine result diverged from oracle at source {r.source}"
+        speedup = t_serial / dt
+        print(common.csv_row(
+            f"serve_engine_kappa{kappa}", dt / REQUESTS * 1e6,
+            f"qps={REQUESTS / dt:.1f} speedup_vs_serial={speedup:.1f}x "
+            f"levels={eng.stats['levels']} "
+            f"midflight={eng.stats['admissions_midflight']}"))
+        if kappa == 32 and speedup < 4.0:
+            raise AssertionError(
+                f"kappa=32 engine speedup {speedup:.1f}x < 4x acceptance bar")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,4 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""BLEST algorithms (the paper's system layer): graph container, BVSS
+construction, single-/multi-source BFS drivers, closeness, triangles,
+reordering, switching policy, the preprocess->run pipeline facade, and the
+multi-pod distribution modes.  See DESIGN.md §1–§4, §8–§9."""

@@ -83,11 +83,16 @@ class PackedMsBfs:
         return v, far, reach
 
     def _planes(self, v_or_diff):
-        """(n_ext, kw) words -> (num_sets_ext, sigma, kw) frontier tiles."""
-        bd = self.bd
-        f = v_or_diff[: bd.n_pad].reshape(bd.num_sets, bd.sigma, -1)
-        return jnp.concatenate(
-            [f, jnp.zeros((1, bd.sigma, f.shape[2]), jnp.uint32)], axis=0)
+        return frontier_planes(self.bd, v_or_diff)
+
+
+def frontier_planes(bd: BvssDevice, v_or_diff):
+    """(n_ext, width) visited/diff rows -> (num_sets_ext, sigma, width)
+    frontier tiles with the sentinel slice set appended (dtype-generic;
+    shared by PackedMsBfs and serve/bfs_engine)."""
+    f = v_or_diff[: bd.n_pad].reshape(bd.num_sets, bd.sigma, -1)
+    return jnp.concatenate(
+        [f, jnp.zeros((1, bd.sigma, f.shape[2]), f.dtype)], axis=0)
 
 
 def unpack_levels_check(v_packed, kappa: int):

@@ -1,0 +1,3 @@
+"""Data generators: synthetic graph families mirroring the paper's
+benchmark suite (``graphs``) and the deterministic, stateless token-stream
+pipeline for the training substrate (``synthetic``, DESIGN.md §5)."""

@@ -1,3 +1,3 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the BLEST hot spots (pulls, scatter-OR, frontier
+sweep) with jnp reference implementations; ``ops.py`` is the public wrapper
+layer that pads shapes and picks interpret mode off-TPU.  DESIGN.md §3."""

@@ -1,0 +1,4 @@
+"""CLI entry points (``python -m repro.launch.<name>``): graph workloads
+(``bfs``), the batched graph-query service (``serve_bfs``), LM training and
+serving (``train``, ``serve``), and the dry-run/roofline analysis tooling
+(``dryrun``, ``roofline``, ``analytic``, ``report``, ``mesh``)."""

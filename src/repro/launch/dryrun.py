@@ -8,8 +8,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 For every (architecture x applicable input shape x mesh) cell:
   jit(step).lower(*ShapeDtypeStructs).compile()
 must succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.
-Records memory_analysis() / cost_analysis() / collective stats to JSON for
-EXPERIMENTS.md §Dry-run and the §Roofline table.
+Records memory_analysis() / cost_analysis() / collective stats to JSON;
+``repro.launch.report`` renders the JSON into the dry-run and roofline
+markdown tables.
 
 Usage:
   python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh multi

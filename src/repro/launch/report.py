@@ -1,4 +1,5 @@
-"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md tables."""
+"""Aggregate results/dryrun/*.json into markdown tables (printed to stdout;
+paste into an EXPERIMENTS.md results document — not checked in)."""
 from __future__ import annotations
 
 import glob

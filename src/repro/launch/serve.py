@@ -1,7 +1,11 @@
-"""Production serving launcher: prefill + batched decode.
+"""LM serving launcher: prefill + continuous-batched decode over the
+:class:`repro.serve.serve_loop.BatchEngine` slot engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         [--reduced] [--requests 8] [--max-new 16] [--mesh-model 1]
+
+The graph-query counterpart (batched BFS/closeness over packed MS-BFS
+lanes) is ``repro.launch.serve_bfs``.
 """
 from __future__ import annotations
 

@@ -1,0 +1,105 @@
+"""Graph-query serving launcher: drive the batched BFS engine
+(:mod:`repro.serve.bfs_engine`) against a fleet of synthetic graphs.
+
+    PYTHONPATH=src python -m repro.launch.serve_bfs \
+        --families kron,road --scale 10 --requests 128 --kappa 32 \
+        [--closeness-frac 0.25] [--cache-mb 64] [--verify]
+
+Registers one graph per family, submits a randomly interleaved stream of
+BFS and closeness requests, drains the engine, and reports throughput plus
+admission/cache statistics.  ``--verify`` checks every BFS result against
+the CPU oracle (bit-identical levels) — the serving analogue of
+``repro.launch.bfs --verify``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--families", default="kron,road",
+                    help="comma-separated graph families (see data/graphs.py)")
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--kappa", type=int, default=32,
+                    help="concurrent lanes per traversal (multiple of 32)")
+    ap.add_argument("--closeness-frac", type=float, default=0.25,
+                    help="fraction of requests that are closeness queries")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="artifact cache budget in MiB (default: unbounded)")
+    ap.add_argument("--layout", default="auto",
+                    choices=["auto", "packed", "byteplane"])
+    ap.add_argument("--verify", action="store_true",
+                    help="check BFS results against the CPU oracle")
+    args = ap.parse_args()
+
+    from repro.core import ref_bfs
+    from repro.data import graphs
+    from repro.serve.bfs_engine import BfsEngine
+
+    if args.kappa <= 0 or args.kappa % 32:
+        ap.error(f"--kappa must be a positive multiple of 32, got {args.kappa}")
+    unknown = [f.strip() for f in args.families.split(",")
+               if f.strip() not in graphs.FAMILIES]
+    if unknown:
+        ap.error(f"unknown families {unknown}; "
+                 f"choose from {sorted(graphs.FAMILIES)}")
+
+    rng = np.random.default_rng(args.seed)
+    cache_bytes = (int(args.cache_mb * (1 << 20))
+                   if args.cache_mb is not None else None)
+    eng = BfsEngine(kappa=args.kappa, cache_bytes=cache_bytes,
+                    layout=args.layout)
+
+    fleet = {}
+    for fam in args.families.split(","):
+        fam = fam.strip()
+        g = graphs.make(fam, scale=args.scale, seed=args.seed)
+        fleet[fam] = g
+        eng.register_graph(fam, g)
+        print(f"registered {fam}: n={g.n} m={g.m}")
+
+    names = list(fleet)
+    submitted = {}
+    for _ in range(args.requests):
+        name = names[int(rng.integers(0, len(names)))]
+        g = fleet[name]
+        src = int(rng.integers(0, g.n))
+        kind = ("closeness" if rng.random() < args.closeness_frac else "bfs")
+        submitted[eng.submit(name, src, kind=kind)] = (name, src, kind)
+
+    t0 = time.perf_counter()
+    results = eng.run()
+    dt = time.perf_counter() - t0
+
+    n_bfs = sum(1 for *_rest, k in submitted.values() if k == "bfs")
+    print(f"served {len(results)} queries ({n_bfs} bfs, "
+          f"{len(results) - n_bfs} closeness) in {dt:.2f}s "
+          f"({len(results) / dt:.1f} qps)")
+    s = eng.stats
+    print(f"batches={s['batches']} levels={s['levels']} "
+          f"mid-flight admissions={s['admissions_midflight']}")
+    c = eng.cache
+    print(f"cache: {len(c)} resident ({c.current_bytes / (1 << 20):.2f} MiB) "
+          f"hits={c.hits} misses={c.misses} evictions={c.evictions}")
+
+    if args.verify:
+        for rid, (name, src, kind) in submitted.items():
+            want = ref_bfs.bfs_levels(fleet[name], src)
+            if kind == "bfs":
+                assert (results[rid].levels == want).all(), (name, src)
+            else:
+                reached = want[want != ref_bfs.UNREACHED]
+                r = results[rid]
+                assert r.far == int(reached.sum()), (name, src)
+                assert r.reach == reached.size, (name, src)
+        print("verified against CPU oracle ✓")
+
+
+if __name__ == "__main__":
+    main()

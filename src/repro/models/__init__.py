@@ -1,0 +1,3 @@
+"""Model zoo for the training/serving substrate: transformer blocks and
+attention variants (``layers``), Mamba-2 SSD (``mamba2``), mixture-of-experts
+(``moe``), and the architecture-dispatching forward pass (``model``)."""

@@ -1,0 +1,4 @@
+"""Serving engines: ``bfs_engine`` batches independent BFS/closeness
+queries into shared packed multi-source traversals (DESIGN.md §6);
+``serve_loop`` is the LM decode continuous-batching engine the graph
+engine's slot-refill design mirrors."""

@@ -1,0 +1,557 @@
+"""Batched BFS query engine over packed MS-BFS lanes (DESIGN.md §6).
+
+The paper's headline serving scenario — millions of single-source
+traversal queries against a fleet of preprocessed graphs — needs three
+things the script-style drivers in :mod:`repro.core` do not provide:
+
+  1. an **admission queue**: independent BFS / closeness requests against
+     *named* graphs arrive in any order and are served in FIFO order;
+  2. **lane packing**: up to ``kappa`` concurrent requests against the same
+     graph are packed into one multi-source traversal (one bit-lane per
+     request, the kappa-bit state of ``core/msbfs_packed.py``), so the BVSS
+     masks are streamed once per level for the whole batch instead of once
+     per query;
+  3. **continuous batching**: lanes have independent lifecycles.  A lane
+     whose frontier empties is *early-exited* (its result is extracted and
+     returned) and its slot is re-seeded with the next queued request
+     **mid-flight**, without restarting the lanes still traversing — the
+     graph-query analogue of slot refill in ``serve/serve_loop.BatchEngine``.
+
+Per-graph artifacts (reordering permutation + BVSS + device arrays) are
+built once and held in :class:`GraphCache`, an LRU keyed on the graph name
+and bounded by device bytes, so a long-running service can serve many more
+graphs than fit on the accelerator at once.
+
+Lane substrates
+---------------
+Two bit-for-bit equivalent lane layouts implement the level step:
+
+* ``layout='packed'`` — the paper-faithful kappa-bit packed words
+  (``(n_ext, kappa/32)`` uint32) driven by the Pallas kernels
+  ``kernels/pull_ms_packed.py`` + ``kernels/scatter_or.py`` (or their jnp
+  references when ``use_pallas=False``).  1/8 the state traffic; the TPU
+  path.
+* ``layout='byteplane'`` — ``(n_ext, kappa)`` uint8 byte-planes using the
+  XLA-native scatter-max OR (``core/msbfs.py`` mechanics).  The fast path
+  on CPU backends, where Pallas interpret mode is impractical.
+
+``layout='auto'`` picks packed on TPU, byteplane elsewhere.  Results are
+identical either way (tests/test_serve_engine.py asserts it), so the choice
+is purely a performance knob.
+
+Per-lane state (either layout) also carries:
+
+* ``levels`` (n_ext, kappa) int32 — *global* level stamps.  A lane stamps
+  its discoveries with the global level counter; extraction subtracts the
+  lane's admission level (tracked host-side per lane), so mid-flight
+  admission needs no per-lane loop skew handling.
+* ``reach`` (kappa,) int32 — per-lane visited counts.  The Eq.(7) ``far``
+  sum (single-source closeness) is accumulated host-side in int64 from the
+  per-level new-vertex counts — the device int32 would overflow on
+  paper-scale graphs (cf. core/closeness.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import OrderedDict, deque
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blest, reorder as reorder_mod
+from repro.core.blest import UNREACHED, BvssDevice
+from repro.core.bvss import Bvss, BvssConfig, build_bvss
+from repro.core.graph import Graph
+from repro.core.msbfs_packed import frontier_planes, unpack_levels_check
+from repro.kernels import ops
+from repro.kernels.pull_ms_packed import pull_ms_packed, pull_ms_packed_ref
+from repro.kernels.scatter_or import scatter_or, scatter_or_ref
+
+KIND_BFS = "bfs"
+KIND_CLOSENESS = "closeness"
+
+
+# ---------------------------------------------------------------------------
+# Requests / results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BfsQuery:
+    """One admitted request: a single-source traversal on a named graph."""
+
+    rid: int
+    graph: str
+    source: int              # original (pre-reordering) vertex id
+    kind: str = KIND_BFS     # 'bfs' | 'closeness'
+
+
+@dataclasses.dataclass
+class BfsResult:
+    rid: int
+    graph: str
+    source: int
+    kind: str
+    levels: np.ndarray | None   # (n,) int32 in original ids (bfs only)
+    far: int                    # sum of distances to reached vertices
+    reach: int                  # reached vertex count (incl. the source)
+    closeness: float | None     # (n-1)/far, 0.0 if nothing reached
+    admitted_at_level: int      # global level counter at admission (0 = cold)
+
+
+# ---------------------------------------------------------------------------
+# Per-graph artifact cache (LRU by device bytes)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GraphArtifacts:
+    """Everything needed to serve one graph: built once, cached, reused."""
+
+    name: str
+    graph: Graph
+    bvss: Bvss
+    bd: BvssDevice
+    perm: np.ndarray        # old id -> new id (pi^{-1})
+    device_bytes: int
+
+
+def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
+                    config: BvssConfig | None = None) -> GraphArtifacts:
+    """Preprocess ``g`` for serving: reorder -> BVSS -> device arrays."""
+    config = config or BvssConfig()
+    rr = reorder_mod.reorder(g, sigma=config.sigma, force=reorder)
+    gp = g.permuted(rr.perm)
+    b = build_bvss(gp, config)
+    bd = blest.to_device(b)
+    arrays = [bd.masks, bd.row_ids, bd.v2r, bd.real_ptrs]
+    if bd.masks_packed is not bd.masks:  # aliased when tau % 4 != 0
+        arrays.append(bd.masks_packed)
+    dev_bytes = sum(int(a.nbytes) for a in arrays)
+    return GraphArtifacts(name=name, graph=g, bvss=b, bd=bd,
+                          perm=np.asarray(rr.perm), device_bytes=dev_bytes)
+
+
+class GraphCache:
+    """LRU cache of :class:`GraphArtifacts`, bounded by total device bytes.
+
+    ``register`` records how to build a graph's artifacts (cheap); ``get``
+    builds on first use and evicts least-recently-used entries until the
+    byte budget holds.  The entry being returned is never evicted, so a
+    budget smaller than a single graph still serves (with rebuild churn,
+    visible in ``stats``).
+    """
+
+    def __init__(self, max_bytes: int | None = None,
+                 config: BvssConfig | None = None):
+        self.max_bytes = max_bytes
+        self.config = config or BvssConfig()
+        self._specs: dict[str, tuple[Graph, str | None]] = {}
+        self._entries: OrderedDict[str, GraphArtifacts] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._evict_listeners: list = []
+
+    def register(self, name: str, graph: Graph, *,
+                 reorder: str | None = None) -> None:
+        if name in self._specs:
+            raise ValueError(f"graph {name!r} already registered")
+        self._specs[name] = (graph, reorder)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def registered(self) -> list[str]:
+        return list(self._specs)
+
+    def is_registered(self, name: str) -> bool:
+        return name in self._specs
+
+    @property
+    def current_bytes(self) -> int:
+        return sum(e.device_bytes for e in self._entries.values())
+
+    def on_evict(self, fn) -> None:
+        """Register a callback fn(name) fired when an entry is evicted."""
+        self._evict_listeners.append(fn)
+
+    def graph(self, name: str) -> Graph:
+        return self._specs[name][0]
+
+    def get(self, name: str) -> GraphArtifacts:
+        if name in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(name)
+            return self._entries[name]
+        if name not in self._specs:
+            raise KeyError(f"graph {name!r} not registered")
+        self.misses += 1
+        g, reorder = self._specs[name]
+        art = build_artifacts(name, g, reorder=reorder, config=self.config)
+        self._entries[name] = art
+        self._entries.move_to_end(name)
+        self._shrink()
+        return art
+
+    def _shrink(self) -> None:
+        """Evict LRU entries until the budget holds.  The entry `get` is
+        about to return was just move_to_end'd and the `len > 1` bound keeps
+        at least one entry, so it is never the victim."""
+        if self.max_bytes is None:
+            return
+        while self.current_bytes > self.max_bytes and len(self._entries) > 1:
+            victim, _ = next(iter(self._entries.items()))
+            self._entries.pop(victim)
+            self.evictions += 1
+            for fn in self._evict_listeners:
+                fn(victim)
+
+
+# ---------------------------------------------------------------------------
+# Lane runner: kappa concurrent lanes with independent lifecycles
+# ---------------------------------------------------------------------------
+
+
+class LaneState(NamedTuple):
+    """Device arrays for kappa in-flight lanes (both layouts share this
+    shape-polymorphic container; packed uses uint32 words, byteplane uint8
+    columns)."""
+
+    v: jax.Array        # (n_ext, kw) uint32 | (n_ext, kappa) uint8 visited
+    f: jax.Array        # (num_sets_ext, sigma, width) frontier tiles
+    levels: jax.Array   # (n_ext, kappa) int32 — global level stamps
+    reach: jax.Array    # (kappa,) int32 — per-lane visited counts
+
+
+class _LaneRunner:
+    """kappa MS-BFS lanes over one graph; jit-compiled level + reseed steps.
+
+    The level step is the packed-word pipeline of
+    :class:`repro.core.msbfs_packed.PackedMsBfs` extended with per-lane
+    bookkeeping; the reseed step clears a set of lanes and seeds new sources
+    into them without touching the other lanes' bits (bitwise lane
+    independence makes this exact, not approximate).
+    """
+
+    def __init__(self, bd: BvssDevice, kappa: int, *, layout: str = "auto",
+                 use_pallas: bool | None = None):
+        if kappa % 32 != 0:
+            raise ValueError("kappa must be a multiple of 32 (packed words)")
+        if layout == "auto":
+            layout = "packed" if jax.default_backend() == "tpu" else "byteplane"
+        if layout not in ("packed", "byteplane"):
+            raise ValueError(layout)
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.bd = bd
+        self.kappa = kappa
+        self.kw = kappa // 32
+        self.layout = layout
+        self.use_pallas = use_pallas
+        self._interpret = jax.default_backend() != "tpu"
+        self._level_fn = jax.jit(self._level)
+        self._reseed_fn = jax.jit(self._reseed)
+
+    # ---- state ------------------------------------------------------------
+    def init_state(self) -> LaneState:
+        bd, kappa = self.bd, self.kappa
+        if self.layout == "packed":
+            v = jnp.zeros((bd.n_ext, self.kw), jnp.uint32)
+        else:
+            v = jnp.zeros((bd.n_ext, kappa), jnp.uint8)
+        return LaneState(
+            v=v,
+            f=self._planes(v),
+            levels=jnp.full((bd.n_ext, kappa), UNREACHED, jnp.int32),
+            reach=jnp.zeros(kappa, jnp.int32),
+        )
+
+    def _planes(self, v_or_diff):
+        """visited/diff rows -> (num_sets_ext, sigma, width) frontier tiles."""
+        return frontier_planes(self.bd, v_or_diff)
+
+    # ---- one level over all lanes -----------------------------------------
+    def _pull_scatter(self, v, f):
+        bd = self.bd
+        if self.layout == "byteplane":
+            if self.use_pallas:
+                marks = ops.pull_ms(bd.masks, f, bd.v2r, sigma=bd.sigma,
+                                    use_pallas=True)
+            else:
+                # bitwise OR-of-selected-planes pull: ~4x faster than the
+                # float einsum in kernels/ref.py on CPU backends
+                ft = f[bd.v2r]  # (N_q, sigma, kappa) uint8 bit-planes
+                marks = jnp.zeros(
+                    (*bd.masks.shape, self.kappa), jnp.uint8)
+                for b in range(bd.sigma):
+                    sel = ((bd.masks >> b) & 1)[:, :, None]
+                    marks = marks | (sel * ft[:, b][:, None, :])
+            return v.at[bd.row_ids.ravel()].max(
+                marks.reshape(-1, self.kappa))
+        if self.use_pallas:
+            marks = pull_ms_packed(bd.masks, f, bd.v2r, sigma=bd.sigma,
+                                   interpret=self._interpret)
+            return scatter_or(v, bd.row_ids.reshape(-1),
+                              marks.reshape(-1, self.kw),
+                              interpret=self._interpret)
+        marks = pull_ms_packed_ref(bd.masks, f[bd.v2r], sigma=bd.sigma)
+        return scatter_or_ref(v, bd.row_ids.reshape(-1),
+                              marks.reshape(-1, self.kw))
+
+    def _lane_bits(self, diff):
+        """diff rows -> (n_ext, kappa) 0/1 int32 newly-visited matrix."""
+        if self.layout == "byteplane":
+            return diff.astype(jnp.int32)
+        return unpack_levels_check(diff, self.kappa).astype(jnp.int32)
+
+    def _level(self, state: LaneState, ell):
+        """Advance every lane one level; returns (state', new_per_lane)."""
+        v = state.v
+        v_next = self._pull_scatter(v, state.f)
+        diff = v_next & ~v if self.layout == "packed" else v_next & (1 - v)
+        bits = self._lane_bits(diff)
+        new_lane = bits.sum(axis=0)
+        return LaneState(
+            v=v_next,
+            f=self._planes(diff),
+            levels=jnp.where(bits == 1, ell, state.levels),
+            reach=state.reach + new_lane,
+        ), new_lane
+
+    def level(self, state: LaneState, ell: int):
+        return self._level_fn(state, jnp.int32(ell))
+
+    # ---- clear + seed a subset of lanes -----------------------------------
+    def _reseed(self, state: LaneState, clear, new_src, ell):
+        """clear: (kappa,) bool — lanes to wipe; new_src: (kappa,) int32 —
+        source to seed into a wiped lane, or -1 to leave it empty."""
+        bd, kappa = self.bd, self.kappa
+        lanes = jnp.arange(kappa)
+        has = new_src >= 0
+        src = jnp.where(has, new_src, 0)
+        if self.layout == "packed":
+            # one uint32 per word with the cleared lanes' bits set
+            word_mask = self._lane_word_mask(clear)
+            v = state.v & ~word_mask[None, :]
+            f = state.f & ~word_mask[None, None, :]
+            seed_bits = (has.astype(jnp.uint32)
+                         << (lanes % 32).astype(jnp.uint32))
+            # cleared bits are 0 and lane bit positions are distinct, so
+            # scatter-add == scatter-OR here
+            v = v.at[src, lanes // 32].add(seed_bits)
+            f = f.at[src // bd.sigma, src % bd.sigma, lanes // 32].add(
+                seed_bits)
+        else:
+            keep = (1 - clear.astype(jnp.uint8))[None, :]
+            v = state.v * keep
+            f = state.f * keep[None]
+            v = v.at[src, lanes].max(has.astype(jnp.uint8))
+            f = f.at[src // bd.sigma, src % bd.sigma, lanes].max(
+                has.astype(jnp.uint8))
+        levels = jnp.where(clear[None, :], UNREACHED, state.levels)
+        levels = levels.at[src, lanes].set(
+            jnp.where(has, ell, levels[src, lanes]))
+        return LaneState(
+            v=v, f=f, levels=levels,
+            reach=jnp.where(clear, has.astype(jnp.int32), state.reach),
+        )
+
+    def _lane_word_mask(self, clear):
+        shifts = jnp.arange(32, dtype=jnp.uint32)
+        bits = clear.astype(jnp.uint32).reshape(self.kw, 32) << shifts
+        return bits.sum(axis=1).astype(jnp.uint32)  # distinct bits: sum == OR
+
+    def reseed(self, state: LaneState, clear: np.ndarray, new_src: np.ndarray,
+               ell: int) -> LaneState:
+        return self._reseed_fn(state, jnp.asarray(clear, bool),
+                               jnp.asarray(new_src, jnp.int32),
+                               jnp.int32(ell))
+
+
+# ---------------------------------------------------------------------------
+# The engine: admission queue + per-graph batch sessions
+# ---------------------------------------------------------------------------
+
+
+class BfsEngine:
+    """Continuous-batching BFS/closeness query engine.
+
+    Usage::
+
+        eng = BfsEngine(kappa=32, cache_bytes=64 << 20)
+        eng.register_graph("social", g1)
+        eng.register_graph("road", g2)
+        r1 = eng.submit("social", source=17)                 # BFS levels
+        r2 = eng.submit("road", source=3, kind="closeness")  # closeness
+        results = eng.run()     # {rid: BfsResult}
+
+    ``run`` drains the queue graph by graph (FIFO on the oldest pending
+    request).  Within one graph it opens a *batch session*: seed up to
+    ``kappa`` sources, advance all lanes one level per tick, extract and
+    re-seed finished lanes each tick until both the lane set and the
+    graph's queue are empty.
+    """
+
+    def __init__(self, *, kappa: int = 32, cache_bytes: int | None = None,
+                 layout: str = "auto", use_pallas: bool | None = None,
+                 config: BvssConfig | None = None,
+                 reorder: str | None = None, keep_results: bool = False):
+        if kappa % 32 != 0 or kappa <= 0:
+            raise ValueError("kappa must be a positive multiple of 32")
+        self.kappa = kappa
+        self.layout = layout
+        self.use_pallas = use_pallas
+        self.default_reorder = reorder
+        self.cache = GraphCache(max_bytes=cache_bytes, config=config)
+        self.cache.on_evict(self._drop_runner)
+        self._runners: dict[str, _LaneRunner] = {}
+        self._queues: OrderedDict[str, deque[BfsQuery]] = OrderedDict()
+        self._rids = itertools.count()
+        # opt-in: retaining every result (full level arrays) would be an
+        # unbounded memory leak in a long-running service
+        self.keep_results = keep_results
+        self.results: dict[int, BfsResult] = {}
+        self.stats = {
+            "queries": 0, "batches": 0, "levels": 0,
+            "admissions_midflight": 0,
+        }
+
+    # ---- registration / admission -----------------------------------------
+    def register_graph(self, name: str, graph: Graph, *,
+                       reorder: str | None = None) -> None:
+        self.cache.register(name, graph,
+                            reorder=reorder or self.default_reorder)
+
+    def submit(self, graph: str, source: int, kind: str = KIND_BFS) -> int:
+        if not self.cache.is_registered(graph):
+            raise KeyError(f"graph {graph!r} not registered")
+        if kind not in (KIND_BFS, KIND_CLOSENESS):
+            raise ValueError(f"unknown query kind {kind!r}")
+        g = self.cache.graph(graph)
+        if not 0 <= source < g.n:
+            raise ValueError(f"source {source} out of range for {graph!r}")
+        rid = next(self._rids)
+        q = BfsQuery(rid=rid, graph=graph, source=int(source), kind=kind)
+        self._queues.setdefault(graph, deque()).append(q)
+        self.stats["queries"] += 1
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ---- serving ----------------------------------------------------------
+    def run(self) -> dict[int, BfsResult]:
+        """Drain every pending request; returns {rid: result} for the ones
+        completed by this call (also recorded in ``self.results`` when the
+        engine was built with ``keep_results=True``)."""
+        out: dict[int, BfsResult] = {}
+        while self._queues:
+            name, queue = next(iter(self._queues.items()))
+            if not queue:
+                self._queues.pop(name)
+                continue
+            self._drain_graph(name, queue, out)
+            self._queues.pop(name, None)
+        if self.keep_results:
+            self.results.update(out)
+        return out
+
+    def _runner_for(self, name: str, bd: BvssDevice) -> _LaneRunner:
+        r = self._runners.get(name)
+        if r is None or r.bd is not bd:
+            r = _LaneRunner(bd, self.kappa, layout=self.layout,
+                            use_pallas=self.use_pallas)
+            self._runners[name] = r
+        return r
+
+    def _drop_runner(self, name: str) -> None:
+        self._runners.pop(name, None)
+
+    def _drain_graph(self, name: str, queue: deque,
+                     out: dict[int, BfsResult]) -> None:
+        art = self.cache.get(name)
+        runner = self._runner_for(name, art.bd)
+        self.stats["batches"] += 1
+        kappa = self.kappa
+        lanes: list[BfsQuery | None] = [None] * kappa
+        admitted_at = np.zeros(kappa, np.int32)
+        # Eq.(7) far accumulated host-side in int64: the device int32 lane
+        # accumulator would overflow on paper-scale graphs (sum of distances
+        # from one source can exceed 2^31; cf. core/closeness.py, which
+        # widens to int64 on host for the same reason).
+        far64 = np.zeros(kappa, np.int64)
+        state = runner.init_state()
+        ell = 0
+        while True:
+            # ---- admission: refill free lanes from the queue -------------
+            free = [i for i in range(kappa) if lanes[i] is None]
+            if free and queue:
+                clear = np.zeros(kappa, bool)
+                new_src = np.full(kappa, -1, np.int32)
+                for i in free:
+                    if not queue:
+                        break
+                    q = queue.popleft()
+                    lanes[i] = q
+                    admitted_at[i] = ell
+                    far64[i] = 0
+                    clear[i] = True
+                    new_src[i] = art.perm[q.source]
+                    if ell > 0:
+                        self.stats["admissions_midflight"] += 1
+                state = runner.reseed(state, clear, new_src, ell)
+            if all(q is None for q in lanes):
+                break
+            # ---- one level for every lane --------------------------------
+            ell += 1
+            state, new_lane = runner.level(state, ell)
+            self.stats["levels"] += 1
+            nl = np.asarray(new_lane)
+            far64 += (ell - admitted_at).astype(np.int64) * nl
+            # ---- per-lane early exit -------------------------------------
+            done = [i for i in range(kappa) if lanes[i] is not None
+                    and (nl[i] == 0 or ell - admitted_at[i] >= art.bd.n_ext)]
+            if done:
+                self._extract(art, state, lanes, done, admitted_at, far64,
+                              out)
+                for i in done:
+                    lanes[i] = None
+
+    def _extract(self, art: GraphArtifacts, state: LaneState,
+                 lanes: list, done: list[int], admitted_at: np.ndarray,
+                 far64: np.ndarray, out: dict[int, BfsResult]) -> None:
+        n = art.graph.n
+        # host-side numpy indexing: a jnp fancy-index here would trace and
+        # compile a fresh XLA gather per distinct `done` pattern.  The
+        # transfer is skipped outright when every finished lane is a
+        # closeness query (levels would be discarded).
+        cols = None
+        if any(lanes[i].kind == KIND_BFS for i in done):
+            cols = np.asarray(state.levels)[:n][:, done]
+        reaches = np.asarray(state.reach)
+        for k, i in enumerate(done):
+            q: BfsQuery = lanes[i]
+            levels = None
+            if q.kind == KIND_BFS:
+                col = cols[:, k]
+                lv = np.where(col != UNREACHED, col - admitted_at[i],
+                              UNREACHED).astype(np.int32)
+                levels = lv[art.perm]
+            far = int(far64[i])
+            cc = None
+            if q.kind == KIND_CLOSENESS:
+                cc = float((n - 1) / far) if far > 0 else 0.0
+            out[q.rid] = BfsResult(
+                rid=q.rid, graph=q.graph, source=q.source, kind=q.kind,
+                levels=levels, far=far, reach=int(reaches[i]), closeness=cc,
+                admitted_at_level=int(admitted_at[i]),
+            )

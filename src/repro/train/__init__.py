@@ -1,0 +1,4 @@
+"""Training substrate: rule-based sharding specs (``sharding``), the
+optimizer (``optimizer``), atomic checkpointing with elastic resume
+(``checkpoint``), and the fault-tolerant train loop (``train_loop``).
+Conventions in DESIGN.md §5."""

@@ -1,0 +1,53 @@
+"""Optional-hypothesis shim for the test suite.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt); the tier-1
+suite must still *collect and run* without it.  Test modules import the
+property-testing symbols from here instead of from ``hypothesis`` directly:
+
+    from hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+
+When hypothesis is installed these are the real objects.  When it is not,
+``given`` returns a decorator that marks the test as skipped (before fixture
+resolution, so the hypothesis-provided argument names never resolve),
+``settings`` is a no-op decorator factory, and ``st`` is a stub whose
+strategy constructors return inert placeholders.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed")
+
+    def given(*_args, **_kwargs):  # noqa: D103 — mirrors hypothesis.given
+        def decorate(fn):
+            def placeholder():
+                pass  # pragma: no cover — skipped before call
+
+            placeholder.__name__ = fn.__name__
+            placeholder.__doc__ = fn.__doc__
+            return _SKIP(placeholder)
+
+        return decorate
+
+    def settings(*_args, **_kwargs):  # noqa: D103 — mirrors hypothesis.settings
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies``: every attribute is a
+        callable returning None, so strategy construction at decoration time
+        is inert."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

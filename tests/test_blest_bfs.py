@@ -95,9 +95,9 @@ def test_levels_are_valid_bfs_labelling(suite):
 
 
 # --------------------------------------------------------------------------
-# property: driver equivalence on random digraphs (hypothesis)
+# property: driver equivalence on random digraphs (hypothesis, optional)
 # --------------------------------------------------------------------------
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis_shim import given, settings, st  # noqa: E402
 
 
 @settings(max_examples=12, deadline=None)

@@ -3,7 +3,7 @@ swept over shapes/dtypes + hypothesis property tests."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, st
 from numpy.testing import assert_allclose
 
 from repro.kernels import ops, ref as kref

@@ -4,7 +4,7 @@ pipeline."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, st
 from numpy.testing import assert_array_equal
 
 from repro.core import blest, msbfs, msbfs_packed

@@ -2,7 +2,7 @@
 Table-1-style claims as assertions."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, st
 
 from repro.core import reorder, ref_bfs
 from repro.core.bvss import build_bvss

@@ -1,0 +1,213 @@
+"""Batched BFS query engine (serve/bfs_engine.py): per-request correctness
+against the CPU oracle, mid-flight admission, closeness accumulators,
+artifact-cache LRU/eviction behaviour, and a property test over random
+graphs x random request arrival orders."""
+import numpy as np
+import pytest
+
+from repro.core import ref_bfs
+from repro.core.graph import from_edges
+from repro.data import graphs
+from repro.serve.bfs_engine import (
+    BfsEngine, GraphCache, build_artifacts)
+
+UNREACHED = ref_bfs.UNREACHED
+
+# Both lane substrates must be bit-identical; pallas kernels run separately
+# (interpret mode) on one tiny case to keep the suite fast.
+LAYOUTS = ["byteplane", "packed"]
+
+
+def _engine(**kw):
+    kw.setdefault("layout", "byteplane")
+    kw.setdefault("use_pallas", False)
+    return BfsEngine(**kw)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return {
+        "kron": graphs.make("kron", scale=7, seed=0),
+        "road": graphs.make("road", scale=6, seed=0),
+    }
+
+
+# ---------------------------------------------------------------- results --
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_results_match_oracle_per_request(pair, layout):
+    """Every admitted request's level array is bit-identical to ref_bfs,
+    across two graphs and more requests than lanes (forces queueing)."""
+    eng = _engine(layout=layout)
+    for name, g in pair.items():
+        eng.register_graph(name, g)
+    rng = np.random.default_rng(0)
+    want = {}
+    for i in range(40):
+        name = "kron" if i % 2 == 0 else "road"
+        g = pair[name]
+        src = int(rng.integers(0, g.n))
+        want[eng.submit(name, src)] = (g, src)
+    res = eng.run()
+    assert len(res) == 40
+    for rid, (g, src) in want.items():
+        assert (res[rid].levels == ref_bfs.bfs_levels(g, src)).all()
+    assert eng.results == {}  # retention is opt-in (keep_results=True)
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_pallas_kernel_paths_wired(layout):
+    """Both layouts' Pallas kernel paths (interpret mode on CPU — packed
+    pull + scatter-OR, MXU byteplane pull) produce oracle-exact results on
+    a small graph."""
+    g = graphs.make("road", scale=5, seed=0)
+    eng = BfsEngine(kappa=32, layout=layout, use_pallas=True)
+    eng.register_graph("tiny", g)
+    rids = {eng.submit("tiny", s): s for s in (0, 7, g.n - 1)}
+    res = eng.run()
+    for rid, s in rids.items():
+        assert (res[rid].levels == ref_bfs.bfs_levels(g, s)).all()
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_midflight_admission_preserves_earlier_lanes(pair, layout):
+    """More same-graph requests than lanes: late arrivals are admitted into
+    slots freed mid-traversal, and neither the late nor the still-active
+    lanes' levels are disturbed."""
+    g = pair["kron"]
+    eng = _engine(kappa=32, layout=layout)
+    eng.register_graph("g", g)
+    rng = np.random.default_rng(3)
+    want = {eng.submit("g", int(s)): int(s)
+            for s in rng.integers(0, g.n, 80)}
+    res = eng.run()
+    assert eng.stats["admissions_midflight"] > 0
+    late = early = 0
+    for rid, src in want.items():
+        assert (res[rid].levels == ref_bfs.bfs_levels(g, src)).all()
+        if res[rid].admitted_at_level > 0:
+            late += 1
+        else:
+            early += 1
+    assert late > 0 and early > 0
+
+
+def test_sourceless_lane_finishes_immediately(pair):
+    """A source with no out-edges early-exits after one level and frees its
+    lane without perturbing the others."""
+    g = from_edges([0, 1, 2], [1, 2, 3], n=8)  # 4..7 isolated
+    eng = _engine(kappa=32)
+    eng.register_graph("g", g)
+    r_iso = eng.submit("g", 7)      # isolated: finishes at level 1
+    r_chain = eng.submit("g", 0)    # 0 -> 1 -> 2 -> 3
+    res = eng.run()
+    lv = res[r_iso].levels
+    assert lv[7] == 0 and (np.delete(lv, 7) == UNREACHED).all()
+    assert (res[r_chain].levels == ref_bfs.bfs_levels(g, 0)).all()
+
+
+def test_closeness_requests_match_oracle(pair):
+    for name, g in pair.items():
+        eng = _engine()
+        eng.register_graph(name, g)
+        rids = {eng.submit(name, s, kind="closeness"): s
+                for s in (0, g.n // 2, g.n - 1)}
+        res = eng.run()
+        for rid, s in rids.items():
+            lv = ref_bfs.bfs_levels(g, s)
+            reached = lv[lv != UNREACHED]
+            r = res[rid]
+            assert r.far == int(reached.sum())
+            assert r.reach == reached.size
+            want_cc = (g.n - 1) / r.far if r.far > 0 else 0.0
+            assert r.closeness == pytest.approx(want_cc, abs=1e-12)
+            assert r.levels is None  # closeness does not ship levels
+
+
+def test_submit_validation(pair):
+    eng = _engine()
+    eng.register_graph("g", pair["kron"])
+    with pytest.raises(KeyError):
+        eng.submit("nope", 0)
+    with pytest.raises(ValueError):
+        eng.submit("g", pair["kron"].n)  # out of range
+    with pytest.raises(ValueError):
+        eng.submit("g", 0, kind="pagerank")
+    with pytest.raises(ValueError):
+        BfsEngine(kappa=31)
+    with pytest.raises(ValueError):
+        eng.register_graph("g", pair["kron"])  # duplicate name
+
+
+# ----------------------------------------------------------------- cache ---
+def test_cache_lru_eviction_order():
+    gs = [graphs.make("kron", scale=6, seed=i) for i in range(3)]
+    one = build_artifacts("probe", gs[0]).device_bytes
+    cache = GraphCache(max_bytes=int(one * 2.5))  # fits ~2 graphs
+    for i, g in enumerate(gs):
+        cache.register(f"g{i}", g)
+    cache.get("g0")
+    cache.get("g1")
+    cache.get("g0")          # g0 now most recent
+    cache.get("g2")          # must evict g1 (LRU), not g0
+    assert "g0" in cache and "g2" in cache and "g1" not in cache
+    assert cache.evictions == 1
+    cache.get("g1")          # rebuild; evicts g0 (LRU after g2 touch... g0)
+    assert cache.misses == 4 and cache.hits == 1
+
+
+def test_cache_eviction_keeps_results_correct():
+    """Budget below a single graph: every get() rebuilds, results stay
+    oracle-exact across the rebuild churn."""
+    gs = {f"g{i}": graphs.make("kron", scale=6, seed=i) for i in range(3)}
+    eng = _engine(cache_bytes=1)
+    for name, g in gs.items():
+        eng.register_graph(name, g)
+    want = {}
+    for rep in (1, 2):
+        for name, g in gs.items():
+            src = (rep * 7) % g.n
+            want[eng.submit(name, src)] = (g, src)
+    res = eng.run()
+    assert eng.cache.evictions >= 2
+    assert len(eng.cache) == 1
+    for rid, (g, src) in want.items():
+        assert (res[rid].levels == ref_bfs.bfs_levels(g, src)).all()
+
+
+def test_engine_reusable_across_runs(pair):
+    """Submitting after a drain reuses cached artifacts (hits, no misses)."""
+    g = pair["kron"]
+    eng = _engine(keep_results=True)
+    eng.register_graph("g", g)
+    r1 = eng.submit("g", 0)
+    eng.run()
+    misses_after_first = eng.cache.misses
+    r2 = eng.submit("g", 1)
+    out = eng.run()
+    assert eng.cache.misses == misses_after_first  # no rebuild
+    assert (out[r2].levels == ref_bfs.bfs_levels(g, 1)).all()
+    assert (eng.results[r1].levels == ref_bfs.bfs_levels(g, 0)).all()
+
+
+# -------------------------------------------------------------- property ---
+from hypothesis_shim import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(8, 60), st.integers(1, 4))
+def test_random_graphs_random_arrival_orders(seed, n, density):
+    """Engine == oracle for arbitrary digraphs, request counts, duplicate
+    sources, and arrival orders (including > kappa requests)."""
+    rng = np.random.default_rng(seed)
+    m = n * density
+    g = from_edges(rng.integers(0, n, m), rng.integers(0, n, m), n=n)
+    eng = _engine(kappa=32)
+    eng.register_graph("g", g)
+    n_req = int(rng.integers(1, 50))
+    want = {}
+    for s in rng.integers(0, g.n, n_req):
+        want[eng.submit("g", int(s))] = int(s)
+    res = eng.run()
+    assert len(res) == n_req
+    for rid, src in want.items():
+        assert (res[rid].levels == ref_bfs.bfs_levels(g, src)).all()

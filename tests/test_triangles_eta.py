@@ -2,7 +2,7 @@
 eta-sweep calibration utility."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, st
 
 from repro.core import triangles
 from repro.core.graph import from_edges

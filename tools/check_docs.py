@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docs hygiene check (run by CI, runnable locally):
+
+    python tools/check_docs.py
+
+Fails (exit 1) unless:
+  * README.md and DESIGN.md exist at the repo root and are non-trivial;
+  * every package directory under src/repro/ (any directory containing
+    .py files) has an __init__.py whose module docstring is non-empty;
+  * every ``DESIGN.md §N`` citation in the source tree points at a section
+    heading that actually exists in DESIGN.md.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def check_root_docs(errors: list[str]) -> None:
+    for name in ("README.md", "DESIGN.md"):
+        p = ROOT / name
+        if not p.is_file():
+            errors.append(f"{name} is missing")
+        elif len(p.read_text().strip()) < 200:
+            errors.append(f"{name} exists but is trivially short")
+
+
+def check_package_docstrings(errors: list[str]) -> None:
+    src = ROOT / "src" / "repro"
+    packages = {src} | {
+        py.parent for py in src.rglob("*.py")
+    }
+    for pkg in sorted(packages):
+        init = pkg / "__init__.py"
+        rel = init.relative_to(ROOT)
+        if not init.is_file():
+            errors.append(f"{rel} is missing (package without __init__.py)")
+            continue
+        doc = ast.get_docstring(ast.parse(init.read_text()))
+        if not doc or not doc.strip():
+            errors.append(f"{rel} has no module docstring")
+
+
+def check_design_citations(errors: list[str]) -> None:
+    design = ROOT / "DESIGN.md"
+    if not design.is_file():
+        return  # already reported
+    sections = set(re.findall(r"^#+\s*§([\d.]+)", design.read_text(),
+                              flags=re.M))
+    cited = set()
+    for py in list((ROOT / "src").rglob("*.py")) + list(
+            (ROOT / "benchmarks").rglob("*.py")):
+        for sec in re.findall(r"DESIGN\.md §([\d.]+)", py.read_text()):
+            cited.add((sec, str(py.relative_to(ROOT))))
+    for sec, where in sorted(cited):
+        # §3.4 is satisfied by a literal §3.4 heading; §2 by §2
+        if sec.rstrip(".") not in {s.rstrip(".") for s in sections}:
+            errors.append(f"{where} cites DESIGN.md §{sec}, "
+                          f"which has no matching heading")
+
+
+def main() -> int:
+    errors: list[str] = []
+    check_root_docs(errors)
+    check_package_docstrings(errors)
+    check_design_citations(errors)
+    if errors:
+        print("docs check FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("docs check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
