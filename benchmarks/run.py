@@ -24,6 +24,7 @@ TABLES = [
     "triangles_bench",
     "closeness_bench",
     "serve_throughput",
+    "serve_switching",
 ]
 
 

@@ -22,6 +22,16 @@ def main():
     print(f"social: n={social.n} m={social.m}   road: n={road.n} m={road.m}")
 
     eng = BfsEngine(kappa=32)
+    # Per-level mode switching is already ON here: the default is
+    # switching="auto" — probe each graph once at admission and, where the
+    # probe says it pays, compact small-frontier levels to the active VSSs
+    # instead of sweeping every VSS densely (README "Tuning traversal
+    # mode", DESIGN.md §10).  Results are bit-identical in every mode; to
+    # pin a policy instead of probing:
+    #
+    #   eng = BfsEngine(kappa=32, switching="on", eta=10.0)  # Eq. (6) always
+    #   eng = BfsEngine(kappa=32, switching="on", eta=0.0)   # force queued
+    #   eng = BfsEngine(kappa=32, switching="off")           # force dense
     eng.register_graph("social", social)
     eng.register_graph("road", road)
 

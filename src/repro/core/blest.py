@@ -197,9 +197,36 @@ class FusedBfs:
 # --------------------------------------------------------------------------
 
 
-def _bucket_size(k: int) -> int:
-    """Round queue length up to a power of two (bounded recompiles)."""
+def bucket_size(k: int) -> int:
+    """Round queue length up to a power of two (bounded recompiles).
+    Shared by :class:`BucketedBfs` and the serve engine's queued sweeps
+    (DESIGN.md §10.2)."""
     return max(VSS_PAD, 1 << (max(k, 1) - 1).bit_length())
+
+
+_bucket_size = bucket_size  # historical internal alias
+
+
+def expand_active_sets(real_ptrs: np.ndarray,
+                       active_sets: np.ndarray) -> np.ndarray:
+    """Active slice sets -> VSS id list (realPtrs range expansion).
+
+    ``real_ptrs`` must be a host numpy copy of ``bd.real_ptrs``;
+    ``active_sets`` a (num_sets,) bool mask.  Shared by the bucketed
+    single-source driver and the serve engine's queued mode."""
+    sets = np.nonzero(active_sets)[0]
+    if sets.size == 0:
+        return np.zeros(0, np.int32)
+    starts = real_ptrs[sets]
+    ends = real_ptrs[sets + 1]
+    counts = ends - starts
+    total = int(counts.sum())
+    out = np.empty(total, np.int32)
+    off = 0
+    for s, c in zip(starts, counts):
+        out[off : off + c] = np.arange(s, s + c, dtype=np.int32)
+        off += c
+    return out
 
 
 @dataclasses.dataclass
@@ -243,20 +270,7 @@ class BucketedBfs:
         self._pad_vss = bd.num_vss  # a guaranteed padding VSS id
 
     def _expand_queue(self, active_sets: np.ndarray) -> np.ndarray:
-        """active slice sets -> VSS id list (realPtrs range expansion)."""
-        sets = np.nonzero(active_sets)[0]
-        if sets.size == 0:
-            return np.zeros(0, np.int32)
-        starts = self._real_ptrs[sets]
-        ends = self._real_ptrs[sets + 1]
-        counts = ends - starts
-        total = int(counts.sum())
-        out = np.empty(total, np.int32)
-        off = 0
-        for s, c in zip(starts, counts):
-            out[off : off + c] = np.arange(s, s + c, dtype=np.int32)
-            off += c
-        return out
+        return expand_active_sets(self._real_ptrs, active_sets)
 
     def __call__(self, src) -> jax.Array:
         import time

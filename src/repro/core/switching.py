@@ -14,6 +14,12 @@ Eq. (6):  switch to dense/bottom-up when   #unvisited < eta * |Q_curr|.
 ``decide_mode`` is the per-level policy; ``probe_switching_benefit`` is the
 paper's preprocessing probe (3 BFS runs from random sources with and without
 switching) that decides whether switching is enabled at all for a graph.
+
+Both are consumed in two places: the single-source bucketed driver
+(``core/blest.BucketedBfs``) and the batched serve engine
+(``serve/bfs_engine.py``), where the probe verdict is cached per graph in
+the artifact cache and the policy runs each level over the *aggregate*
+frontier of all packed lanes (DESIGN.md §10.2–§10.3).
 """
 from __future__ import annotations
 
@@ -46,13 +52,29 @@ def probe_switching_benefit(
     eta: float = ETA_DEFAULT,
     runs: int = 3,
     seed: int = 0,
+    *,
+    use_pallas: bool = True,
+    packed: bool = True,
 ) -> SwitchingDecision:
     """Paper §7.1: run ``runs`` BFSs from random sources with and without
-    switching; enable it only if it helps."""
+    switching; enable it only if it helps.
+
+    ``use_pallas``/``packed`` select the kernel path of the timed runs.
+    The probe is a *single-source proxy*: it times ``BucketedBfs``, not the
+    caller's eventual traversal, so it cannot reproduce e.g. the serve
+    engine's multi-lane substrates or per-level batching overhead exactly —
+    'auto' consumers treat the verdict as a heuristic gate with 'on'/'off'
+    as overrides (DESIGN.md §10.3/§10.4).  The serve engine forces
+    ``use_pallas=False`` off-TPU because interpret-mode wall-times are
+    meaningless (cf. benchmarks/common.py)."""
     rng = np.random.default_rng(seed)
     sources = rng.integers(0, bd.n, runs)
-    t_with = _timed_runs(blest.BucketedBfs(bd, eta=eta), sources)
-    t_without = _timed_runs(blest.BucketedBfs(bd, eta=None), sources)
+    t_with = _timed_runs(
+        blest.BucketedBfs(bd, eta=eta, use_pallas=use_pallas, packed=packed),
+        sources)
+    t_without = _timed_runs(
+        blest.BucketedBfs(bd, eta=None, use_pallas=use_pallas, packed=packed),
+        sources)
     return SwitchingDecision(
         enabled=t_with < t_without,
         time_with=t_with,
@@ -60,15 +82,28 @@ def probe_switching_benefit(
     )
 
 
-def _timed_runs(runner, sources) -> float:
+def _timed_runs(runner, sources, passes: int = 2) -> float:
     import jax
 
-    total = 0.0
+    # warmup pass: run every source once untimed so the timed passes hit the
+    # jit cache for every per-level bucket shape — otherwise the probe
+    # measures compilation, not traversal, and (since the switching variant
+    # compiles strictly more shapes) would disable switching on nearly
+    # every graph at container scale
     for s in sources:
-        t0 = time.perf_counter()
         jax.block_until_ready(runner(int(s)))
-        total += time.perf_counter() - t0
-    return total
+    # min over timed passes: a single pass is scheduler-jitter-limited on
+    # shared machines, and the enabled verdict compares totals that can sit
+    # within a few percent of each other
+    best = float("inf")
+    for _ in range(passes):
+        total = 0.0
+        for s in sources:
+            t0 = time.perf_counter()
+            jax.block_until_ready(runner(int(s)))
+            total += time.perf_counter() - t0
+        best = min(best, total)
+    return best
 
 
 def per_level_analysis(bd: blest.BvssDevice, src: int, eta: float = ETA_DEFAULT

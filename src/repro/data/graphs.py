@@ -104,6 +104,28 @@ def triangulated_grid(rows: int, cols: int, seed: int = 0) -> Graph:
     return grid2d(rows, cols, seed=seed, diag=True)
 
 
+def star(n: int) -> Graph:
+    """Hub-and-spoke: vertex 0 ↔ every other vertex (undirected).
+
+    The extreme small-frontier family: a BFS from a leaf has three levels
+    whose frontiers are {leaf}, {hub}, {all other leaves} — the first two
+    touch a handful of VSSs, so queued (top-down) scheduling beats the dense
+    sweep by ~N_v/|Q|; the serve-switching benchmark's headline case."""
+    leaves = np.arange(1, n, dtype=np.int64)
+    hub = np.zeros(n - 1, dtype=np.int64)
+    return from_edges(np.concatenate([hub, leaves]),
+                      np.concatenate([leaves, hub]), n=n)
+
+
+def ring(n: int) -> Graph:
+    """Cycle: i ↔ i+1 mod n (undirected) — maximal diameter, every frontier
+    is exactly two vertices; stresses per-level queued scheduling and
+    mid-flight admission at depth."""
+    i = np.arange(n, dtype=np.int64)
+    j = (i + 1) % n
+    return from_edges(np.concatenate([i, j]), np.concatenate([j, i]), n=n)
+
+
 def small_world(n: int, k: int = 8, p: float = 0.05, seed: int = 0) -> Graph:
     """Watts-Strogatz-ish: ring lattice + random rewiring (social stand-in)."""
     rng = np.random.default_rng(seed)
@@ -125,6 +147,8 @@ FAMILIES = {
     "delaunay": lambda scale=10, seed=0: triangulated_grid(1 << (scale // 2), 1 << (scale - scale // 2), seed=seed),
     "rgg": lambda scale=10, seed=0: rgg(1 << scale, seed=seed),
     "social": lambda scale=10, seed=0: small_world(1 << scale, seed=seed),
+    "star": lambda scale=10, seed=0: star(1 << scale),
+    "ring": lambda scale=10, seed=0: ring(1 << scale),
 }
 
 

@@ -1,3 +1,4 @@
-"""Pallas TPU kernels for the BLEST hot spots (pulls, scatter-OR, frontier
-sweep) with jnp reference implementations; ``ops.py`` is the public wrapper
-layer that pads shapes and picks interpret mode off-TPU.  DESIGN.md §3."""
+"""Pallas TPU kernels for the BLEST hot spots (dense and frontier-compacted
+queued pulls, scatter-OR, frontier sweep) with jnp reference
+implementations; ``ops.py`` is the public wrapper layer that pads shapes
+and picks interpret mode off-TPU.  DESIGN.md §3, §10.1."""

@@ -1,0 +1,90 @@
+"""Frontier-compacted packed multi-source pull (DESIGN.md §10.1).
+
+The queued-mode companion of :mod:`kernels.pull_ms_packed`: instead of
+sweeping all ``N_v`` VSSs (dense work ~ N_v * tau even when one frontier
+bit is set), the grid is the *active* VSS list ``qids`` — the union over
+all kappa lanes of VSSs whose parent slice set holds a frontier bit,
+bucket-padded to a power of two with a guaranteed padding VSS id — so the
+pull does ~ |Q| * tau work, the paper's queued/top-down scheduling (Eq. (6)
+left branch) applied to packed lanes.
+
+Per grid step i the kernel pulls, for VSS ``q = qids[i]`` with sigma-bit
+masks m:
+
+    marks[i, j, w] = OR_{b : m[j]_b = 1}  F_packed[v2r[q]*sigma + b, w]
+
+Both the mask row block and the parent frontier tile are selected through
+*scalar-prefetched* index arrays (``qids`` directly, ``v2r`` composed
+through it) — the double-indirection analogue of the ``virtualToReal``
+prefetch in kernels/pull_ms.py, here applied on the input side so neither
+the masks nor the frontier need a host-side gather.  Padding bucket slots
+name a padding VSS (zero masks, sentinel parent set), so they contribute
+no marks; the caller scatters with ``row_ids[qids]`` whose padding rows
+land in the sentinel vertex slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pull_ms_packed_queued_kernel(qids_ref, v2r_ref, masks_ref, f_ref,
+                                  out_ref, *, sigma):
+    del qids_ref, v2r_ref  # consumed by the index maps only
+    mask = masks_ref[...][0]      # (tau,) uint8
+    f = f_ref[...][0]             # (sigma, kw) uint32
+    kw = f.shape[1]
+    acc = jnp.zeros((mask.shape[0], kw), jnp.uint32)
+    for b in range(sigma):
+        sel = ((mask >> b) & 1).astype(jnp.uint32)[:, None]  # (tau, 1)
+        # sel in {0,1}: 0-sel = all-ones / all-zeros word (multiply-free)
+        acc = acc | ((jnp.uint32(0) - sel) & f[b][None, :])
+    out_ref[...] = acc[None]
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def pull_ms_packed_queued(
+    masks: jax.Array,      # (N_v, tau) uint8 — ALL VSS masks (not gathered)
+    f_packed: jax.Array,   # (num_sets_ext, sigma, kw) uint32 frontier words
+    v2r: jax.Array,        # (N_v,) int32
+    qids: jax.Array,       # (B,) int32 — active VSS ids, bucket-padded
+    *,
+    sigma: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """marks (B, tau, kw) uint32 — packed pull over the queued VSSs only."""
+    _, tau = masks.shape
+    _, sig, kw = f_packed.shape
+    assert sig == sigma
+    b_q = qids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b_q,),
+        in_specs=[
+            pl.BlockSpec((1, tau), lambda i, qids_, v2r_: (qids_[i], 0)),
+            pl.BlockSpec((1, sigma, kw),
+                         lambda i, qids_, v2r_: (v2r_[qids_[i]], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tau, kw), lambda i, qids_, v2r_: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pull_ms_packed_queued_kernel, sigma=sigma),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b_q, tau, kw), jnp.uint32),
+        interpret=interpret,
+    )(qids, v2r, masks, f_packed)
+
+
+def pull_ms_packed_queued_ref(masks, f_packed, v2r, qids, sigma: int = 8):
+    """Oracle: XLA take of the queued rows, then the dense-pull reference."""
+    m = masks[qids]                 # (B, tau) uint8
+    f_tiles = f_packed[v2r[qids]]   # (B, sigma, kw) uint32
+    acc = jnp.zeros((m.shape[0], m.shape[1], f_tiles.shape[2]), jnp.uint32)
+    for b in range(sigma):
+        sel = ((m >> b) & 1).astype(jnp.uint32)[:, :, None]
+        acc = acc | (sel * f_tiles[:, b][:, None, :])
+    return acc

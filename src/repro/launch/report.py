@@ -1,5 +1,6 @@
 """Aggregate results/dryrun/*.json into markdown tables (printed to stdout;
-paste into an EXPERIMENTS.md results document — not checked in)."""
+paste into the results section of the checked-in EXPERIMENTS.md, which also
+catalogues the benchmark modules)."""
 from __future__ import annotations
 
 import glob

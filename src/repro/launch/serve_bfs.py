@@ -3,13 +3,20 @@
 
     PYTHONPATH=src python -m repro.launch.serve_bfs \
         --families kron,road --scale 10 --requests 128 --kappa 32 \
-        [--closeness-frac 0.25] [--cache-mb 64] [--verify]
+        [--closeness-frac 0.25] [--cache-mb 64] [--verify] \
+        [--switching {auto,on,off}] [--eta 10.0]
 
 Registers one graph per family, submits a randomly interleaved stream of
 BFS and closeness requests, drains the engine, and reports throughput plus
-admission/cache statistics.  ``--verify`` checks every BFS result against
-the CPU oracle (bit-identical levels) — the serving analogue of
+admission/cache/switching statistics.  ``--verify`` checks every BFS result
+against the CPU oracle (bit-identical levels) — the serving analogue of
 ``repro.launch.bfs --verify``.
+
+``--switching``/``--eta`` surface the per-level mode policy (DESIGN.md
+§10.4): ``auto`` (default) runs the paper's preprocessing probe per graph
+and applies Eq. (6) only where it helps, ``on`` applies it everywhere,
+``off`` forces the dense sweep (pre-switching behaviour).  ``--eta 0``
+with ``--switching on`` forces queued sweeps every level.
 """
 from __future__ import annotations
 
@@ -34,16 +41,28 @@ def main():
                     help="artifact cache budget in MiB (default: unbounded)")
     ap.add_argument("--layout", default="auto",
                     choices=["auto", "packed", "byteplane"])
+    ap.add_argument("--switching", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="per-level mode policy: auto = probe per graph, "
+                         "on = always apply Eq. (6), off = dense sweeps only")
+    ap.add_argument("--eta", type=float, default=None,
+                    help="Eq. (6) threshold (default: paper's 10.0; "
+                         "0 forces queued sweeps under --switching on)")
     ap.add_argument("--verify", action="store_true",
                     help="check BFS results against the CPU oracle")
     args = ap.parse_args()
 
     from repro.core import ref_bfs
+    from repro.core.switching import ETA_DEFAULT
     from repro.data import graphs
     from repro.serve.bfs_engine import BfsEngine
 
     if args.kappa <= 0 or args.kappa % 32:
         ap.error(f"--kappa must be a positive multiple of 32, got {args.kappa}")
+    if args.eta is None:
+        args.eta = ETA_DEFAULT
+    elif args.eta < 0:
+        ap.error(f"--eta must be >= 0, got {args.eta}")
     unknown = [f.strip() for f in args.families.split(",")
                if f.strip() not in graphs.FAMILIES]
     if unknown:
@@ -54,7 +73,8 @@ def main():
     cache_bytes = (int(args.cache_mb * (1 << 20))
                    if args.cache_mb is not None else None)
     eng = BfsEngine(kappa=args.kappa, cache_bytes=cache_bytes,
-                    layout=args.layout)
+                    layout=args.layout, switching=args.switching,
+                    eta=args.eta)
 
     fleet = {}
     for fam in args.families.split(","):
@@ -83,7 +103,20 @@ def main():
           f"({len(results) / dt:.1f} qps)")
     s = eng.stats
     print(f"batches={s['batches']} levels={s['levels']} "
+          f"(dense={s['levels_dense']} queued={s['levels_queued']}) "
           f"mid-flight admissions={s['admissions_midflight']}")
+    for name in fleet:
+        art = eng.cache.peek(name)
+        if art is None:
+            continue
+        sw = art.switching
+        verdict = ("no probe (switching={})".format(args.switching)
+                   if sw is None else
+                   f"probe {'enabled' if sw.enabled else 'disabled'} "
+                   f"(with={sw.time_with * 1e3:.1f}ms "
+                   f"without={sw.time_without * 1e3:.1f}ms)")
+        print(f"  {name}: reorder={art.reorder.algorithm} "
+              f"scale_free={art.reorder.scale_free} switching: {verdict}")
     c = eng.cache
     print(f"cache: {len(c)} resident ({c.current_bytes / (1 << 20):.2f} MiB) "
           f"hits={c.hits} misses={c.misses} evictions={c.evictions}")

@@ -39,6 +39,30 @@ Two bit-for-bit equivalent lane layouts implement the level step:
 identical either way (tests/test_serve_engine.py asserts it), so the choice
 is purely a performance knob.
 
+Per-level mode switching (DESIGN.md §10)
+----------------------------------------
+Each level is executed by one of two sweeps, chosen by the paper's Eq. (6)
+policy (``core/switching.decide_mode``) over the *aggregate* frontier of
+all packed lanes:
+
+* ``dense``  — the full sweep over every VSS (work ~ N_v * tau), inactive
+  VSSs neutralized by zero frontier words; the bottom-up analogue and the
+  only mode the engine had before switching landed.
+* ``queued`` — frontier-compacted: the union of active VSSs across lanes is
+  expanded host-side (realPtrs ranges), bucket-padded to a power of two,
+  and pulled via ``kernels/pull_ms_packed_queued.py`` (packed substrate,
+  scalar-prefetched double indirection) or an XLA take-based path
+  (byteplane); work ~ |Q| * tau.
+
+Whether the policy runs at all is the ``switching`` knob: ``'off'`` forces
+dense (legacy behaviour), ``'on'`` applies Eq. (6) unconditionally, and
+``'auto'`` defers to the paper's per-graph preprocessing probe
+(``probe_switching_benefit``), which :class:`GraphCache` runs once per
+admitted graph and caches in the artifact (DESIGN.md §10.3).  Switching is
+performance-only: results stay bit-identical to ``core/ref_bfs.py`` in
+every mode (``eta=0`` with ``switching='on'`` forces queued every level;
+tests/test_serve_switching.py pins all three against the oracle).
+
 Per-lane state (either layout) also carries:
 
 * ``levels`` (n_ext, kappa) int32 — *global* level stamps.  A lane stamps
@@ -62,13 +86,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blest, reorder as reorder_mod
-from repro.core.blest import UNREACHED, BvssDevice
+from repro.core import switching as switching_mod
+from repro.core.blest import (
+    UNREACHED, BvssDevice, bucket_size, expand_active_sets)
 from repro.core.bvss import Bvss, BvssConfig, build_bvss
 from repro.core.graph import Graph
 from repro.core.msbfs_packed import frontier_planes, unpack_levels_check
 from repro.kernels import ops
 from repro.kernels.pull_ms_packed import pull_ms_packed, pull_ms_packed_ref
+from repro.kernels.pull_ms_packed_queued import (
+    pull_ms_packed_queued, pull_ms_packed_queued_ref)
 from repro.kernels.scatter_or import scatter_or, scatter_or_ref
+
+SWITCHING_MODES = ("auto", "on", "off")
 
 KIND_BFS = "bfs"
 KIND_CLOSENESS = "closeness"
@@ -109,30 +139,66 @@ class BfsResult:
 
 @dataclasses.dataclass
 class GraphArtifacts:
-    """Everything needed to serve one graph: built once, cached, reused."""
+    """Everything needed to serve one graph: built once, cached, reused.
+
+    Beyond the device substrate this carries the per-graph *policy* tuned at
+    preprocessing time (DESIGN.md §10.3): the reordering dispatch verdict
+    (``reorder``, from ``core/reorder.reorder``) and the switching probe
+    verdict (``switching``, ``None`` unless the probe ran), so per-request
+    traversals get the tuned policy for free on cache hits.
+    """
 
     name: str
     graph: Graph
     bvss: Bvss
     bd: BvssDevice
     perm: np.ndarray        # old id -> new id (pi^{-1})
-    device_bytes: int
+    reorder: reorder_mod.ReorderResult
+    switching: switching_mod.SwitchingDecision | None
+    device_bytes: int       # substrate arrays resident on the accelerator
+    aux_bytes: int          # reorder/probe artifacts kept alongside them
+
+    @property
+    def total_bytes(self) -> int:
+        """What this entry costs the cache budget (DESIGN.md §10.3)."""
+        return self.device_bytes + self.aux_bytes
+
+
+# nominal footprint of a cached SwitchingDecision (three scalars + header);
+# counted so probe artifacts are visible to the cache bound, per §10.3
+_PROBE_DECISION_BYTES = 64
 
 
 def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
-                    config: BvssConfig | None = None) -> GraphArtifacts:
-    """Preprocess ``g`` for serving: reorder -> BVSS -> device arrays."""
+                    config: BvssConfig | None = None,
+                    probe: bool = False,
+                    eta: float = switching_mod.ETA_DEFAULT,
+                    probe_use_pallas: bool = False) -> GraphArtifacts:
+    """Preprocess ``g`` for serving: reorder -> BVSS -> device arrays, plus
+    (``probe=True``) the paper's switching probe — 3 BFS runs from random
+    sources with and without Eq. (6) switching — whose verdict is cached in
+    the artifact."""
     config = config or BvssConfig()
     rr = reorder_mod.reorder(g, sigma=config.sigma, force=reorder)
     gp = g.permuted(rr.perm)
     b = build_bvss(gp, config)
     bd = blest.to_device(b)
+    sw = None
+    if probe:
+        sw = switching_mod.probe_switching_benefit(
+            bd, eta=eta, use_pallas=probe_use_pallas)
     arrays = [bd.masks, bd.row_ids, bd.v2r, bd.real_ptrs]
     if bd.masks_packed is not bd.masks:  # aliased when tau % 4 != 0
         arrays.append(bd.masks_packed)
     dev_bytes = sum(int(a.nbytes) for a in arrays)
-    return GraphArtifacts(name=name, graph=g, bvss=b, bd=bd,
-                          perm=np.asarray(rr.perm), device_bytes=dev_bytes)
+    perm = np.asarray(rr.perm)
+    # the O(n) permutation and the probe verdict live for exactly as long as
+    # the entry does, so they count against the eviction budget too —
+    # previously only the substrate arrays were accounted
+    aux_bytes = int(perm.nbytes) + (_PROBE_DECISION_BYTES if sw else 0)
+    return GraphArtifacts(name=name, graph=g, bvss=b, bd=bd, perm=perm,
+                          reorder=rr, switching=sw,
+                          device_bytes=dev_bytes, aux_bytes=aux_bytes)
 
 
 class GraphCache:
@@ -146,9 +212,15 @@ class GraphCache:
     """
 
     def __init__(self, max_bytes: int | None = None,
-                 config: BvssConfig | None = None):
+                 config: BvssConfig | None = None, *,
+                 probe: bool = False,
+                 eta: float = switching_mod.ETA_DEFAULT,
+                 probe_use_pallas: bool = False):
         self.max_bytes = max_bytes
         self.config = config or BvssConfig()
+        self.probe = probe
+        self.eta = eta
+        self.probe_use_pallas = probe_use_pallas
         self._specs: dict[str, tuple[Graph, str | None]] = {}
         self._entries: OrderedDict[str, GraphArtifacts] = OrderedDict()
         self.hits = 0
@@ -177,7 +249,14 @@ class GraphCache:
 
     @property
     def current_bytes(self) -> int:
-        return sum(e.device_bytes for e in self._entries.values())
+        # total_bytes, not device_bytes: the perm / probe artifacts an entry
+        # pins must count or the configured bound silently over-admits
+        return sum(e.total_bytes for e in self._entries.values())
+
+    def peek(self, name: str) -> GraphArtifacts | None:
+        """Resident entry without touching LRU order or hit stats (for
+        introspection, e.g. printing probe verdicts in launchers)."""
+        return self._entries.get(name)
 
     def on_evict(self, fn) -> None:
         """Register a callback fn(name) fired when an entry is evicted."""
@@ -195,7 +274,9 @@ class GraphCache:
             raise KeyError(f"graph {name!r} not registered")
         self.misses += 1
         g, reorder = self._specs[name]
-        art = build_artifacts(name, g, reorder=reorder, config=self.config)
+        art = build_artifacts(name, g, reorder=reorder, config=self.config,
+                              probe=self.probe, eta=self.eta,
+                              probe_use_pallas=self.probe_use_pallas)
         self._entries[name] = art
         self._entries.move_to_end(name)
         self._shrink()
@@ -258,7 +339,13 @@ class _LaneRunner:
         self.use_pallas = use_pallas
         self._interpret = jax.default_backend() != "tpu"
         self._level_fn = jax.jit(self._level)
+        # one jitted callable; XLA re-traces per distinct bucket size, and
+        # power-of-two bucketing bounds that to O(log N_v) shapes (§2)
+        self._level_queued_fn = jax.jit(self._level_queued)
         self._reseed_fn = jax.jit(self._reseed)
+        self._active_fn = jax.jit(lambda f: (f != 0).any(axis=(1, 2)))
+        self._real_ptrs = np.asarray(bd.real_ptrs)
+        self._pad_vss = bd.num_vss  # a guaranteed padding VSS id
 
     # ---- state ------------------------------------------------------------
     def init_state(self) -> LaneState:
@@ -306,16 +393,44 @@ class _LaneRunner:
         return scatter_or_ref(v, bd.row_ids.reshape(-1),
                               marks.reshape(-1, self.kw))
 
+    def _pull_scatter_queued(self, v, f, qids):
+        """Frontier-compacted pull+scatter over the active VSS list only
+        (DESIGN.md §10.1): work ~ |Q| * tau instead of N_v * tau."""
+        bd = self.bd
+        if self.layout == "byteplane":
+            # XLA take-based queued path: gather the queued masks/rows/parent
+            # tiles, then the same OR-of-selected-planes pull as dense.  (The
+            # MXU byteplane kernel is deliberately not given a queued twin —
+            # off-TPU the take-based path is the fast one, and on TPU the
+            # packed substrate is the default.)
+            masks_q = bd.masks[qids]            # (B, tau) uint8
+            ft = f[bd.v2r[qids]]                # (B, sigma, kappa) uint8
+            marks = jnp.zeros((qids.shape[0], bd.tau, self.kappa), jnp.uint8)
+            for b in range(bd.sigma):
+                sel = ((masks_q >> b) & 1)[:, :, None]
+                marks = marks | (sel * ft[:, b][:, None, :])
+            rows = bd.row_ids[qids]
+            return v.at[rows.ravel()].max(marks.reshape(-1, self.kappa))
+        rows = bd.row_ids[qids].reshape(-1)
+        if self.use_pallas:
+            marks = pull_ms_packed_queued(bd.masks, f, bd.v2r, qids,
+                                          sigma=bd.sigma,
+                                          interpret=self._interpret)
+            return scatter_or(v, rows, marks.reshape(-1, self.kw),
+                              interpret=self._interpret)
+        marks = pull_ms_packed_queued_ref(bd.masks, f, bd.v2r, qids,
+                                          sigma=bd.sigma)
+        return scatter_or_ref(v, rows, marks.reshape(-1, self.kw))
+
     def _lane_bits(self, diff):
         """diff rows -> (n_ext, kappa) 0/1 int32 newly-visited matrix."""
         if self.layout == "byteplane":
             return diff.astype(jnp.int32)
         return unpack_levels_check(diff, self.kappa).astype(jnp.int32)
 
-    def _level(self, state: LaneState, ell):
-        """Advance every lane one level; returns (state', new_per_lane)."""
+    def _finish_level(self, state: LaneState, v_next, ell):
+        """Shared tail of both sweeps: diff, level stamps, frontier tiles."""
         v = state.v
-        v_next = self._pull_scatter(v, state.f)
         diff = v_next & ~v if self.layout == "packed" else v_next & (1 - v)
         bits = self._lane_bits(diff)
         new_lane = bits.sum(axis=0)
@@ -326,8 +441,49 @@ class _LaneRunner:
             reach=state.reach + new_lane,
         ), new_lane
 
+    def _level(self, state: LaneState, ell):
+        """Advance every lane one dense level; returns (state', new_per_lane)."""
+        v_next = self._pull_scatter(state.v, state.f)
+        return self._finish_level(state, v_next, ell)
+
+    def _level_queued(self, state: LaneState, ell, qids):
+        """Advance every lane one queued level over the active VSSs only."""
+        v_next = self._pull_scatter_queued(state.v, state.f, qids)
+        return self._finish_level(state, v_next, ell)
+
     def level(self, state: LaneState, ell: int):
         return self._level_fn(state, jnp.int32(ell))
+
+    def level_queued(self, state: LaneState, ell: int, qids: np.ndarray):
+        return self._level_queued_fn(state, jnp.int32(ell),
+                                     jnp.asarray(qids, jnp.int32))
+
+    def active_set_mask(self, f) -> np.ndarray:
+        """Union frontier across lanes -> (num_sets,) bool on host.
+
+        A slice set is active when *any* lane holds a frontier bit in it;
+        its realPtrs range names every VSS that can produce marks this
+        level, so queued sweeps over the expansion are exact (§10.2)."""
+        return np.asarray(self._active_fn(f))[: self.bd.num_sets]
+
+    def queue_len(self, active_mask: np.ndarray) -> int:
+        """|Q| — total VSS count under the active sets, without
+        materializing the id list (the dense branch never needs it)."""
+        sets = np.nonzero(active_mask)[0]
+        rp = self._real_ptrs
+        return int((rp[sets + 1] - rp[sets]).sum())
+
+    def active_vss(self, active_mask: np.ndarray) -> np.ndarray:
+        """Expand the active sets into the VSS id list (queued branch only)."""
+        return expand_active_sets(self._real_ptrs, active_mask)
+
+    def bucket_qids(self, qids: np.ndarray) -> np.ndarray:
+        """Pad the active list to a power-of-two bucket with padding VSS
+        ids (zero masks, sentinel rows), bounding jit re-traces."""
+        bs = bucket_size(qids.size)
+        padded = np.full(bs, self._pad_vss, np.int32)
+        padded[: qids.size] = qids
+        return padded
 
     # ---- clear + seed a subset of lanes -----------------------------------
     def _reseed(self, state: LaneState, clear, new_src, ell):
@@ -403,14 +559,29 @@ class BfsEngine:
     def __init__(self, *, kappa: int = 32, cache_bytes: int | None = None,
                  layout: str = "auto", use_pallas: bool | None = None,
                  config: BvssConfig | None = None,
-                 reorder: str | None = None, keep_results: bool = False):
+                 reorder: str | None = None, keep_results: bool = False,
+                 switching: str = "auto",
+                 eta: float = switching_mod.ETA_DEFAULT):
         if kappa % 32 != 0 or kappa <= 0:
             raise ValueError("kappa must be a positive multiple of 32")
+        if switching not in SWITCHING_MODES:
+            raise ValueError(
+                f"switching must be one of {SWITCHING_MODES}, got {switching!r}")
+        if eta < 0:
+            raise ValueError(f"eta must be >= 0, got {eta}")
         self.kappa = kappa
         self.layout = layout
         self.use_pallas = use_pallas
         self.default_reorder = reorder
-        self.cache = GraphCache(max_bytes=cache_bytes, config=config)
+        self.switching = switching
+        self.eta = float(eta)
+        # probe timings in Pallas interpret mode are meaningless (see
+        # benchmarks/common.py), so the probe only uses Pallas on real TPUs
+        probe_pallas = (jax.default_backend() == "tpu"
+                        and use_pallas is not False)
+        self.cache = GraphCache(max_bytes=cache_bytes, config=config,
+                                probe=(switching == "auto"), eta=self.eta,
+                                probe_use_pallas=probe_pallas)
         self.cache.on_evict(self._drop_runner)
         self._runners: dict[str, _LaneRunner] = {}
         self._queues: OrderedDict[str, deque[BfsQuery]] = OrderedDict()
@@ -422,6 +593,7 @@ class BfsEngine:
         self.stats = {
             "queries": 0, "batches": 0, "levels": 0,
             "admissions_midflight": 0,
+            "levels_dense": 0, "levels_queued": 0,
         }
 
     # ---- registration / admission -----------------------------------------
@@ -476,6 +648,17 @@ class BfsEngine:
     def _drop_runner(self, name: str) -> None:
         self._runners.pop(name, None)
 
+    def _policy_active(self, art: GraphArtifacts) -> bool:
+        """Resolve the per-graph mode policy (DESIGN.md §10.3): 'off' forces
+        dense, 'on' forces the Eq. (6) policy, 'auto' defers to the cached
+        probe verdict (policy applied when no verdict is available)."""
+        if self.switching == "off":
+            return False
+        if self.switching == "on":
+            return True
+        sw = art.switching
+        return True if sw is None else bool(sw.enabled)
+
     def _drain_graph(self, name: str, queue: deque,
                      out: dict[int, BfsResult]) -> None:
         art = self.cache.get(name)
@@ -489,6 +672,10 @@ class BfsEngine:
         # from one source can exceed 2^31; cf. core/closeness.py, which
         # widens to int64 on host for the same reason).
         far64 = np.zeros(kappa, np.int64)
+        # per-lane visited counts mirrored host-side: the Eq. (6) unvisited
+        # term aggregated over in-flight lanes, without a device round-trip
+        reach_host = np.zeros(kappa, np.int64)
+        policy_on = self._policy_active(art)
         state = runner.init_state()
         ell = 0
         while True:
@@ -504,6 +691,7 @@ class BfsEngine:
                     lanes[i] = q
                     admitted_at[i] = ell
                     far64[i] = 0
+                    reach_host[i] = 1  # the seeded source is visited
                     clear[i] = True
                     new_src[i] = art.perm[q.source]
                     if ell > 0:
@@ -511,11 +699,36 @@ class BfsEngine:
                 state = runner.reseed(state, clear, new_src, ell)
             if all(q is None for q in lanes):
                 break
+            # ---- mode decision over the aggregate frontier (§10.2) -------
+            # counts first, ids later: the decision needs only |Q|; the id
+            # list is expanded on the queued branch alone, so dense levels
+            # under an active policy skip the O(|Q|) host expansion
+            mode = "dense"
+            active_mask = None
+            if policy_on:
+                active_mask = runner.active_set_mask(state.f)
+                q_len = runner.queue_len(active_mask)
+                unvisited = int(sum(art.graph.n - reach_host[i]
+                                    for i in range(kappa)
+                                    if lanes[i] is not None))
+                mode = switching_mod.decide_mode(unvisited, q_len, self.eta)
+                # bucket guard: a padded queue as large as the full VSS
+                # sweep can only lose to dense (gather overhead, no savings)
+                if bucket_size(q_len) >= art.bd.num_vss_pad:
+                    mode = "dense"
             # ---- one level for every lane --------------------------------
             ell += 1
-            state, new_lane = runner.level(state, ell)
+            if mode == "queued":
+                qids = runner.active_vss(active_mask)
+                state, new_lane = runner.level_queued(
+                    state, ell, runner.bucket_qids(qids))
+                self.stats["levels_queued"] += 1
+            else:
+                state, new_lane = runner.level(state, ell)
+                self.stats["levels_dense"] += 1
             self.stats["levels"] += 1
             nl = np.asarray(new_lane)
+            reach_host += nl
             far64 += (ell - admitted_at).astype(np.int64) * nl
             # ---- per-lane early exit -------------------------------------
             done = [i for i in range(kappa) if lanes[i] is not None

@@ -141,7 +141,9 @@ def test_submit_validation(pair):
 # ----------------------------------------------------------------- cache ---
 def test_cache_lru_eviction_order():
     gs = [graphs.make("kron", scale=6, seed=i) for i in range(3)]
-    one = build_artifacts("probe", gs[0]).device_bytes
+    # budget in total_bytes (device substrate + reorder/probe aux), the
+    # unit the cache bound actually enforces
+    one = build_artifacts("probe", gs[0]).total_bytes
     cache = GraphCache(max_bytes=int(one * 2.5))  # fits ~2 graphs
     for i, g in enumerate(gs):
         cache.register(f"g{i}", g)

@@ -1,0 +1,199 @@
+"""Adaptive per-level switching in the serve engine (DESIGN.md §10):
+forced dense / forced queued / the Eq. (6) policy / probe-gated auto all
+produce oracle-identical levels and closeness on ring, star, and scale-free
+graphs, across both lane substrates, including mid-flight admission while
+in queued mode; plus the queued Pallas kernel vs its jnp reference and the
+artifact-cache accounting of probe/reorder artifacts."""
+import numpy as np
+import pytest
+
+from repro.core import ref_bfs
+from repro.data import graphs
+from repro.serve.bfs_engine import BfsEngine, GraphCache, build_artifacts
+
+UNREACHED = ref_bfs.UNREACHED
+
+# (switching, eta): dense-forced, queued-forced, Eq. (6) policy, probe-gated
+MODES = [("off", 10.0), ("on", 0.0), ("on", 10.0), ("auto", 10.0)]
+LAYOUTS = ["byteplane", "packed"]
+
+
+def _engine(**kw):
+    kw.setdefault("layout", "byteplane")
+    kw.setdefault("use_pallas", False)
+    return BfsEngine(**kw)
+
+
+@pytest.fixture(scope="module")
+def trio():
+    """Ring (max diameter, 2-vertex frontiers), star (hub-and-spoke), and a
+    scale-free graph — the three frontier regimes of the switching policy."""
+    return {
+        "ring": graphs.make("ring", scale=6),
+        "star": graphs.make("star", scale=7),
+        "kron": graphs.make("kron", scale=7, seed=0),
+    }
+
+
+# ----------------------------------------------------------- mode x oracle --
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("switching,eta", MODES)
+def test_all_modes_match_oracle(trio, layout, switching, eta):
+    eng = _engine(layout=layout, switching=switching, eta=eta)
+    for name, g in trio.items():
+        eng.register_graph(name, g)
+    rng = np.random.default_rng(0)
+    want = {}
+    for name, g in trio.items():
+        for s in rng.integers(0, g.n, 6):
+            want[eng.submit(name, int(s))] = (g, int(s))
+    res = eng.run()
+    for rid, (g, src) in want.items():
+        assert (res[rid].levels == ref_bfs.bfs_levels(g, src)).all(), \
+            (layout, switching, eta)
+    # forced modes actually forced (bucket guard may densify crowded levels
+    # even under eta=0, but queued levels must appear on these graphs)
+    if switching == "off":
+        assert eng.stats["levels_queued"] == 0
+    if (switching, eta) == ("on", 0.0):
+        assert eng.stats["levels_queued"] > 0
+
+
+def test_closeness_matches_oracle_in_queued_mode(trio):
+    g = trio["star"]
+    eng = _engine(switching="on", eta=0.0)
+    eng.register_graph("g", g)
+    rids = {eng.submit("g", s, kind="closeness"): s for s in (0, 1, g.n - 1)}
+    res = eng.run()
+    assert eng.stats["levels_queued"] > 0
+    for rid, s in rids.items():
+        lv = ref_bfs.bfs_levels(g, s)
+        reached = lv[lv != UNREACHED]
+        assert res[rid].far == int(reached.sum())
+        assert res[rid].reach == reached.size
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_midflight_admission_in_queued_mode(trio, layout):
+    """More ring requests than lanes under forced-queued: late arrivals are
+    admitted into freed slots while queued sweeps run, and every result —
+    early, late, still-active neighbours — stays oracle-exact."""
+    g = trio["ring"]
+    eng = _engine(kappa=32, layout=layout, switching="on", eta=0.0)
+    eng.register_graph("g", g)
+    rng = np.random.default_rng(3)
+    want = {eng.submit("g", int(s)): int(s)
+            for s in rng.integers(0, g.n, 72)}
+    res = eng.run()
+    assert eng.stats["admissions_midflight"] > 0
+    assert eng.stats["levels_queued"] > 0
+    assert eng.stats["levels_dense"] == 0  # ring never trips the guard
+    assert any(r.admitted_at_level > 0 for r in res.values())
+    for rid, src in want.items():
+        assert (res[rid].levels == ref_bfs.bfs_levels(g, src)).all()
+
+
+def test_pallas_queued_kernel_path(trio):
+    """The packed substrate's queued sweep through the real Pallas kernel
+    (interpret mode on CPU) is oracle-exact."""
+    g = trio["star"]
+    eng = BfsEngine(kappa=32, layout="packed", use_pallas=True,
+                    switching="on", eta=0.0)
+    eng.register_graph("g", g)
+    rids = {eng.submit("g", s): s for s in (0, 1, g.n // 2, g.n - 1)}
+    res = eng.run()
+    assert eng.stats["levels_queued"] > 0
+    for rid, s in rids.items():
+        assert (res[rid].levels == ref_bfs.bfs_levels(g, s)).all()
+
+
+def test_queued_kernel_matches_ref(trio):
+    """Unit-level: pull_ms_packed_queued (interpret) == its jnp reference ==
+    the dense packed pull restricted to the queued rows."""
+    import jax.numpy as jnp
+
+    from repro.kernels.pull_ms_packed import pull_ms_packed_ref
+    from repro.kernels.pull_ms_packed_queued import (
+        pull_ms_packed_queued, pull_ms_packed_queued_ref)
+
+    art = build_artifacts("g", trio["kron"])
+    bd = art.bd
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.integers(0, 2**32, (bd.num_sets_ext, bd.sigma, 1),
+                                 dtype=np.uint32))
+    qids = jnp.asarray(rng.integers(0, bd.num_vss, 16, dtype=np.int32))
+    want = pull_ms_packed_queued_ref(bd.masks, f, bd.v2r, qids,
+                                     sigma=bd.sigma)
+    got = pull_ms_packed_queued(bd.masks, f, bd.v2r, qids, sigma=bd.sigma,
+                                interpret=True)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    dense = pull_ms_packed_ref(bd.masks, f[bd.v2r], sigma=bd.sigma)
+    assert (np.asarray(want) == np.asarray(dense)[np.asarray(qids)]).all()
+
+
+# ------------------------------------------------------- probe integration --
+def test_auto_probes_once_and_caches_verdict(trio):
+    g = trio["kron"]
+    eng = _engine(switching="auto")
+    eng.register_graph("g", g)
+    eng.submit("g", 0)
+    eng.run()
+    art = eng.cache.peek("g")
+    assert art.switching is not None  # probe ran at artifact build
+    assert isinstance(art.switching.enabled, bool)
+    assert art.reorder.algorithm in ("jaccard", "rcm")
+    misses = eng.cache.misses
+    eng.submit("g", 1)
+    eng.run()
+    assert eng.cache.misses == misses  # verdict reused, no re-probe
+
+
+def test_off_skips_probe(trio):
+    eng = _engine(switching="off")
+    eng.register_graph("g", trio["kron"])
+    eng.submit("g", 0)
+    eng.run()
+    assert eng.cache.peek("g").switching is None
+
+
+def test_level_mode_counters_partition_levels(trio):
+    eng = _engine(switching="on", eta=10.0)
+    eng.register_graph("g", trio["kron"])
+    for s in (0, 3, 9):
+        eng.submit("g", s)
+    eng.run()
+    s = eng.stats
+    assert s["levels_dense"] + s["levels_queued"] == s["levels"]
+
+
+def test_invalid_policy_rejected():
+    with pytest.raises(ValueError):
+        BfsEngine(switching="sometimes")
+    with pytest.raises(ValueError):
+        BfsEngine(eta=-1.0)
+
+
+# -------------------------------------------------------- cache accounting --
+def test_artifact_accounting_includes_aux_bytes(trio):
+    g = trio["kron"]
+    plain = build_artifacts("g", g)
+    assert plain.aux_bytes >= plain.perm.nbytes  # reorder artifact counted
+    assert plain.total_bytes == plain.device_bytes + plain.aux_bytes
+    probed = build_artifacts("g", g, probe=True)
+    assert probed.switching is not None
+    assert probed.aux_bytes > plain.aux_bytes  # probe artifact counted
+
+
+def test_cache_bound_holds_with_aux_bytes(trio):
+    """A budget that device-bytes-only accounting would let two entries
+    squeeze under must evict down to one when aux bytes are counted."""
+    gs = [graphs.make("kron", scale=6, seed=i) for i in range(2)]
+    one = build_artifacts("probe", gs[0])
+    budget = 2 * one.device_bytes + one.aux_bytes  # < 2 * total_bytes
+    cache = GraphCache(max_bytes=budget)
+    for i, g in enumerate(gs):
+        cache.register(f"g{i}", g)
+    cache.get("g0")
+    cache.get("g1")
+    assert len(cache) == 1 and cache.evictions == 1
+    assert cache.current_bytes <= budget

@@ -8,7 +8,12 @@ Fails (exit 1) unless:
   * every package directory under src/repro/ (any directory containing
     .py files) has an __init__.py whose module docstring is non-empty;
   * every ``DESIGN.md §N`` citation in the source tree points at a section
-    heading that actually exists in DESIGN.md.
+    heading that actually exists in DESIGN.md;
+  * DESIGN.md section numbers have not drifted: no duplicates, top-level
+    sections in increasing order, and every subsection nested under its
+    parent (§X.Y between §X and the next top-level heading) — DESIGN.md's
+    numbers are stable (code cites them), so drift means a renumber or a
+    misplaced insert that silently invalidates citations.
 """
 from __future__ import annotations
 
@@ -63,11 +68,44 @@ def check_design_citations(errors: list[str]) -> None:
                           f"which has no matching heading")
 
 
+def check_design_numbering(errors: list[str]) -> None:
+    """Section-number drift: duplicates, out-of-order top-levels, or
+    subsections outside their parent's span."""
+    design = ROOT / "DESIGN.md"
+    if not design.is_file():
+        return  # already reported
+    headings = re.findall(r"^#+\s*§([\d.]+)", design.read_text(), flags=re.M)
+    headings = [h.rstrip(".") for h in headings]
+    seen = set()
+    for h in headings:
+        if h in seen:
+            errors.append(f"DESIGN.md has duplicate section §{h}")
+        seen.add(h)
+    last_top = 0
+    current_top = None
+    for h in headings:
+        parts = h.split(".")
+        if len(parts) == 1:
+            top = int(parts[0])
+            if top <= last_top:
+                errors.append(
+                    f"DESIGN.md top-level §{top} appears after §{last_top} "
+                    f"(sections must stay in increasing order)")
+            last_top = top
+            current_top = parts[0]
+        else:
+            if parts[0] != current_top:
+                errors.append(
+                    f"DESIGN.md subsection §{h} is not nested under a "
+                    f"§{parts[0]} heading")
+
+
 def main() -> int:
     errors: list[str] = []
     check_root_docs(errors)
     check_package_docstrings(errors)
     check_design_citations(errors)
+    check_design_numbering(errors)
     if errors:
         print("docs check FAILED:")
         for e in errors:
