@@ -61,3 +61,38 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def serve_drain(eng, submit) -> tuple[float, dict, dict]:
+    """Run ``submit(eng)`` + drain under a timer; returns (seconds,
+    results, per-drain stats delta) — the delta, not the engine's
+    cumulative counters, so reported splits belong to exactly this run.
+    ``submit`` may interleave its own ``eng.run()`` calls (burst drains);
+    any results they return are folded in."""
+    before = dict(eng.stats)
+    t0 = time.perf_counter()
+    results = submit(eng) or {}
+    results.update(eng.run())
+    dt = time.perf_counter() - t0
+    delta = {k: eng.stats[k] - before[k] for k in eng.stats}
+    return dt, results, delta
+
+
+def interleaved_best(configs, make_engine, drain, repeats: int) -> dict:
+    """Warm every engine (one untimed drain: artifact build, probe, jit),
+    then interleave the timed repeats round-robin so a noise burst on a
+    shared runner degrades every configuration equally instead of sinking
+    whichever one it landed on; returns {label: (engine, (seconds,
+    results, stats))} with the min-time sample per config.  Shared by the
+    serve benchmarks (serve_switching, serve_fused)."""
+    engines = {}
+    for label, kw in configs:
+        eng = make_engine(kw)
+        drain(eng)
+        engines[label] = eng
+    samples = {label: [] for label, _ in configs}
+    for _ in range(repeats):
+        for label, _ in configs:
+            samples[label].append(drain(engines[label]))
+    return {label: (engines[label], min(s, key=lambda r: r[0]))
+            for label, s in samples.items()}

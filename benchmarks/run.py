@@ -25,6 +25,7 @@ TABLES = [
     "closeness_bench",
     "serve_throughput",
     "serve_switching",
+    "serve_fused",
 ]
 
 

@@ -1,0 +1,162 @@
+"""Fused on-device megatick traversal vs the per-level serve engine
+(DESIGN.md §11.4).
+
+The per-level engine pays one jit dispatch **plus a device→host sync per
+level** (the new-count transfer, and the active-mask fetch under a live
+policy), so on small-diameter graphs — the scale-free family, where a
+traversal is 4–8 crowded dense levels — it is dispatch-bound, not
+sweep-bound.  ``megatick=T`` runs up to ``T`` consecutive dense levels in
+one ``lax.while_loop`` dispatch with one bookkeeping transfer per window,
+so the same request stream costs a fraction of the host round-trips.
+
+This module drives kappa-sized request bursts over an RMAT (scale-free
+family, edge factor 2 so the container-scale graph still has a few levels
+to fuse) graph at kappa=32 through ``megatick ∈ {1, 4, 64}`` (switching
+off: the dense-dominant regime the window is built for) plus a
+``megatick=64`` row with the Eq. (6) policy live (queued verdicts drop to
+the host bucketed path, the window re-enters after).  Bursts are one lane
+generation each — the engine fuses windows once a graph's queue drains,
+and keeps the per-level path under backlog so admission stays immediate
+(DESIGN.md §11.1) — submitted back to back so every drain serves kappa
+requests.  Every result of every configuration is checked bit-identical to
+the CPU oracle before its row prints; rows report levels/sec, the speedup
+over the ``megatick=1`` baseline, and host syncs per level (every blocking
+device→host transfer in the drain loop — new-count/window-history fetches,
+active-mask fetches, extraction gathers — divided by levels served).
+
+Acceptance bar (megatick PR, full size only): ``megatick>=4`` beats the
+per-level engine by >= 2x levels/sec on the scale-free graph at kappa=32,
+with host syncs/level < 1.
+
+    PYTHONPATH=src python -m benchmarks.serve_fused [--tiny] [--json PATH]
+
+``--tiny`` shrinks the graph and request count for the CI smoke step; the
+smoke keeps every oracle check but not the throughput bar (sub-ms tiny
+timings are jitter-dominated on shared CI runners).  ``--json PATH`` dumps
+the rows for the CI perf-trajectory artifact (``BENCH_serve_fused.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import ref_bfs
+from repro.data import graphs
+
+from benchmarks import common
+
+KAPPA = 32
+MEGATICKS = (1, 4, 64)
+REPEATS = 5
+EDGE_FACTOR = 2
+
+
+def _submit_bursts(srcs):
+    """One kappa-burst per drain: the queue empties between generations,
+    which is the regime the megatick window engages in (DESIGN.md §11.1)."""
+    def submit(eng):
+        results = {}
+        for i in range(0, len(srcs), KAPPA):
+            for s in srcs[i : i + KAPPA]:
+                eng.submit("kron", int(s))
+            results.update(eng.run())
+        return results
+    return submit
+
+
+def run_configs(configs, g, srcs, oracle) -> dict:
+    from repro.serve.bfs_engine import BfsEngine
+
+    def make_engine(kw):
+        eng = BfsEngine(kappa=KAPPA, reorder="natural", **kw)
+        eng.register_graph("kron", g)
+        return eng
+
+    drain = lambda eng: common.serve_drain(eng, _submit_bursts(srcs))
+    best = common.interleaved_best(configs, make_engine, drain, REPEATS)
+    rows = {}
+    for label, (_eng, (secs, results, stats)) in best.items():
+        for r in results.values():
+            assert (r.levels == oracle[r.source]).all(), \
+                f"{label}: result diverged from oracle at source {r.source}"
+        rows[label] = {
+            "label": label, "seconds": secs, "stats": stats,
+            "levels_per_s": stats["levels"] / secs,
+            "syncs_per_level": stats["host_syncs"] / stats["levels"]}
+    return rows
+
+
+def main(argv=()):
+    # argv defaults to () — benchmarks.run calls main() with the harness's
+    # own flags still in sys.argv; only the __main__ path forwards them
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small graph, few requests")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump rows as JSON (CI perf-trajectory artifact)")
+    args = ap.parse_args(list(argv))
+
+    scale = 6 if args.tiny else 8
+    n_req = KAPPA if args.tiny else 3 * KAPPA
+    g = graphs.rmat(scale, edge_factor=EDGE_FACTOR, seed=0)
+    rng = np.random.default_rng(0)
+    srcs = rng.integers(0, g.n, n_req)
+    oracle = {int(s): ref_bfs.bfs_levels(g, int(s))
+              for s in set(map(int, srcs))}
+
+    configs = [(f"serve_fused_mega{t}", {"switching": "off", "megatick": t})
+               for t in MEGATICKS]
+    configs += [("serve_fused_mega64_policy",
+                 {"switching": "on", "eta": 10.0, "megatick": 64})]
+
+    rows = run_configs(configs, g, srcs, oracle)
+
+    base = rows["serve_fused_mega1"]
+    for label, row in rows.items():
+        s = row["stats"]
+        print(common.csv_row(
+            label, row["seconds"] / n_req * 1e6,
+            f"levels_per_s={row['levels_per_s']:.0f} "
+            f"speedup_vs_mega1={row['levels_per_s'] / base['levels_per_s']:.2f}x "
+            f"syncs_per_level={row['syncs_per_level']:.2f} "
+            f"megaticks={s['megaticks']} dense={s['levels_dense']} "
+            f"queued={s['levels_queued']}"))
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"kappa": KAPPA, "scale": scale, "requests": n_req,
+                       "tiny": args.tiny, "rows": list(rows.values())},
+                      fh, indent=2)
+        print(f"# wrote {args.json}")
+
+    # acceptance (full size only).  --tiny is a *smoke*: sub-ms timings are
+    # jitter-dominated on shared CI runners, so the tiny run keeps the
+    # oracle checks (the correctness invariant) but not the throughput bars.
+    if args.tiny:
+        return
+    for t in MEGATICKS[1:]:
+        row = rows[f"serve_fused_mega{t}"]
+        if row["syncs_per_level"] >= 1.0:
+            raise AssertionError(
+                f"megatick={t} reports {row['syncs_per_level']:.2f} host "
+                f"syncs/level — the window is not amortizing round-trips")
+        if row["levels_per_s"] <= base["levels_per_s"]:
+            raise AssertionError(
+                f"megatick={t} ({row['levels_per_s']:.0f} levels/s) lost to "
+                f"the per-level engine ({base['levels_per_s']:.0f}) on the "
+                f"scale-free graph at kappa={KAPPA}")
+    best = max(rows[f"serve_fused_mega{t}"]["levels_per_s"]
+               for t in MEGATICKS[1:])
+    if best < 2.0 * base["levels_per_s"]:
+        raise AssertionError(
+            f"best megatick config ({best:.0f} levels/s) did not reach 2x "
+            f"the per-level engine ({base['levels_per_s']:.0f} levels/s) on "
+            f"the scale-free graph at kappa={KAPPA}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

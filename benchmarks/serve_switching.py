@@ -2,24 +2,35 @@
 (DESIGN.md §10).
 
 A star graph at kappa=32 is the headline small-frontier case: a BFS from a
-leaf spends two of its three levels on frontiers of one-to-few vertices, so
-the dense sweep (work ~ N_v * tau per level, the engine's only mode before
-switching) wastes ~N_v/|Q| of its pull on inactive VSSs, while the queued
-sweep touches only the active ones.  This module drives a fixed leaf-source
-request stream through the engine in every policy configuration — forced
-dense (``switching='off'``), forced queued (``switching='on', eta=0``), the
-Eq. (6) policy across an eta sweep, and the probe-gated ``'auto'`` — and
-reports qps plus the speedup over the dense baseline and the per-mode level
-counts.  Every result of every configuration is checked bit-identical to
-the CPU oracle before its row prints (a wrong result disqualifies the run).
+leaf spends two of its three levels on frontiers of one-to-few vertices.
+Before the §11.2 slice compaction the dense sweep did ``N_v * tau`` work
+per level, wasting ~N_v/|Q| of its pull on padding and inactive slots, and
+the Eq. (6) policy was worth 1.4–2.8x here.  The compacted dense sweep
+removed exactly that waste (the same star workload runs ~6x faster dense
+than PR 2's engine), so at container scale the CPU-path margin the policy
+used to harvest is gone — per-level host overheads (active-mask fetch,
+queue expansion) now outweigh the remaining ~2x work asymmetry, and the
+*serve-aware probe* (DESIGN.md §11.3) correctly disables switching on this
+substrate.  The queued win remains a packed/TPU question, gated per graph
+by the same probe.
+
+This module still drives a fixed leaf-source request stream through every
+policy configuration — forced dense (``switching='off'``), forced queued
+(``switching='on', eta=0``), the Eq. (6) policy across an eta sweep, and
+the probe-gated ``'auto'`` — and reports qps plus the speedup over the
+dense baseline and the per-mode level counts.  Every result of every
+configuration is checked bit-identical to the CPU oracle before its row
+prints (a wrong result disqualifies the run).
 
 Not to be confused with ``benchmarks/fig5_switching.py``, which reproduces
 the paper's Fig. 5 *single-source* per-level switching analysis (Top-Down /
 Bottom-Up / policy / oracle traces); this module measures the same Eq. (6)
 mechanism wired into the *batched serve engine* (see EXPERIMENTS.md).
 
-Acceptance bar (switching PR): ``auto`` >= the dense baseline on the star
-graph at kappa=32, with per-request oracle equality.
+Acceptance bar (re-anchored by the megatick PR, full size only): the
+probe-gated ``auto`` must not lose materially to the dense baseline — the
+probe's whole job is to keep mispredicted switching from costing
+throughput — with per-request oracle equality everywhere.
 
     PYTHONPATH=src python -m benchmarks.serve_switching [--tiny]
 
@@ -30,7 +41,6 @@ timings are jitter-dominated on shared CI runners).
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
@@ -41,36 +51,39 @@ from benchmarks import common
 
 KAPPA = 32
 ETAS = (2.0, 10.0, 50.0)
-REPEATS = 3
+# min over interleaved repeats; auto-vs-dense compares *identical* dense
+# workloads when the probe disables, so enough samples must survive a
+# noise burst on a shared runner for the two mins to converge
+REPEATS = 6
 
 
-def _drain(eng, srcs):
-    """Submit + drain the full stream once; returns (seconds, results,
-    per-drain stats delta) — the delta, not the engine's cumulative
-    counters, so the reported mode split belongs to exactly this run."""
-    for s in srcs:
-        eng.submit("star", int(s))
-    before = dict(eng.stats)
-    t0 = time.perf_counter()
-    results = eng.run()
-    dt = time.perf_counter() - t0
-    delta = {k: eng.stats[k] - before[k] for k in eng.stats}
-    return dt, results, delta
+def _submit_all(srcs):
+    """The whole stream in one drain (requests > kappa: backlog regime)."""
+    def submit(eng):
+        for s in srcs:
+            eng.submit("star", int(s))
+    return submit
 
 
-def run_config(label: str, g, srcs, oracle, **engine_kw) -> dict:
+def run_configs(configs, g, srcs, oracle) -> dict:
     from repro.serve.bfs_engine import BfsEngine
 
-    eng = BfsEngine(kappa=KAPPA, reorder="natural", **engine_kw)
-    eng.register_graph("star", g)
-    _drain(eng, srcs)  # untimed: artifact build (+ probe) and jit warmup
-    best, results, stats = min(
-        (_drain(eng, srcs) for _ in range(REPEATS)), key=lambda r: r[0])
-    for r in results.values():
-        assert (r.levels == oracle[r.source]).all(), \
-            f"{label}: result diverged from oracle at source {r.source}"
-    return {"label": label, "seconds": best, "stats": stats,
+    def make_engine(kw):
+        eng = BfsEngine(kappa=KAPPA, reorder="natural", **kw)
+        eng.register_graph("star", g)
+        return eng
+
+    drain = lambda eng: common.serve_drain(eng, _submit_all(srcs))
+    best = common.interleaved_best(configs, make_engine, drain, REPEATS)
+    rows = {}
+    for label, (eng, (secs, results, stats)) in best.items():
+        for r in results.values():
+            assert (r.levels == oracle[r.source]).all(), \
+                f"{label}: result diverged from oracle at source {r.source}"
+        rows[label] = {
+            "label": label, "seconds": secs, "stats": stats,
             "probe": getattr(eng.cache.peek("star"), "switching", None)}
+    return rows
 
 
 def main(argv=()):
@@ -95,9 +108,7 @@ def main(argv=()):
                 for eta in ETAS]
     configs += [("serve_switch_auto", {"switching": "auto"})]
 
-    rows = {}
-    for label, kw in configs:
-        rows[label] = run_config(label, g, srcs, oracle, **kw)
+    rows = run_configs(configs, g, srcs, oracle)
 
     t_dense = rows["serve_switch_dense"]["seconds"]
     for label, row in rows.items():
@@ -111,33 +122,31 @@ def main(argv=()):
             f"speedup_vs_dense={t_dense / row['seconds']:.2f}x "
             f"dense={s['levels_dense']} queued={s['levels_queued']}{extra}"))
 
-    # acceptance (full size only).  --tiny is a *smoke*: at scale 8 the
-    # per-level host overhead of queued mode rivals the sweep savings and
-    # the sub-ms timings are dominated by jitter, so the tiny run keeps the
-    # oracle checks (the correctness invariant) but not the throughput bars.
+    # acceptance (full size only).  --tiny is a *smoke*: sub-ms tiny timings
+    # are dominated by jitter, so the tiny run keeps the oracle checks (the
+    # correctness invariant) but not the throughput bar.
+    #
+    # The original switching-PR bar ("best forced eta beats dense") was
+    # re-anchored by the megatick PR: the §11.2 slice compaction made the
+    # dense baseline itself several-fold faster on this workload (the waste
+    # the policy harvested), so on the CPU substrate forced-queued rows are
+    # expected to sit at or below dense now — they remain here as the
+    # regression surface for the queued machinery's correctness and cost,
+    # not as a speedup claim (see the module docstring).
     if args.tiny:
         return
     qps_dense = n_req / t_dense
-    # 1) the forced-policy rows exercise the queued machinery
-    #    deterministically (no probe gate): the best eta must beat dense
-    #    outright on the small-frontier graph, so a probe misprediction
-    #    cannot turn the whole benchmark into a vacuous dense-vs-dense pass
-    t_best_eta = min(rows[f"serve_switch_eta{eta:g}"]["seconds"]
-                     for eta in ETAS)
-    if n_req / t_best_eta < qps_dense:
-        raise AssertionError(
-            f"best forced-eta config ({n_req / t_best_eta:.1f} qps) lost to "
-            f"the dense baseline ({qps_dense:.1f} qps) on the star graph at "
-            f"kappa={KAPPA} — the queued sweep itself regressed")
-    # 2) probe-gated auto must not lose to dense (0.95 tolerates container
-    #    timer noise): when the probe enables it inherits the policy's win,
-    #    when it disables it runs the identical dense workload
+    # probe-gated auto must not lose materially to dense (0.9 tolerates
+    # container timer noise): when the probe disables switching — the
+    # expected verdict on this substrate — auto runs the identical dense
+    # workload; if it ever enables, it must have measured a win first
     t_auto = rows["serve_switch_auto"]["seconds"]
     qps_auto = n_req / t_auto
-    if qps_auto < 0.95 * qps_dense:
+    if qps_auto < 0.9 * qps_dense:
         raise AssertionError(
             f"auto ({qps_auto:.1f} qps) lost to the dense baseline "
-            f"({qps_dense:.1f} qps) on the star graph at kappa={KAPPA}")
+            f"({qps_dense:.1f} qps) on the star graph at kappa={KAPPA} — "
+            f"the probe gate failed to protect throughput")
 
 
 if __name__ == "__main__":

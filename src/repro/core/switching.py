@@ -13,7 +13,10 @@ Eq. (6):  switch to dense/bottom-up when   #unvisited < eta * |Q_curr|.
 
 ``decide_mode`` is the per-level policy; ``probe_switching_benefit`` is the
 paper's preprocessing probe (3 BFS runs from random sources with and without
-switching) that decides whether switching is enabled at all for a graph.
+switching) that decides whether switching is enabled at all for a graph;
+``probe_switching_benefit_serve`` is its serve-aware twin, timing the
+kappa-lane serve runner instead of the single-source proxy (DESIGN.md
+§11.3).
 
 Both are consumed in two places: the single-source bucketed driver
 (``core/blest.BucketedBfs``) and the batched serve engine
@@ -45,6 +48,10 @@ class SwitchingDecision:
     enabled: bool
     time_with: float
     time_without: float
+    # which traversal the probe timed: 'single' = the BucketedBfs
+    # single-source proxy, 'serve' = the kappa-lane serve runner itself
+    # (DESIGN.md §11.3)
+    proxy: str = "single"
 
 
 def probe_switching_benefit(
@@ -64,9 +71,9 @@ def probe_switching_benefit(
     caller's eventual traversal, so it cannot reproduce e.g. the serve
     engine's multi-lane substrates or per-level batching overhead exactly —
     'auto' consumers treat the verdict as a heuristic gate with 'on'/'off'
-    as overrides (DESIGN.md §10.3/§10.4).  The serve engine forces
-    ``use_pallas=False`` off-TPU because interpret-mode wall-times are
-    meaningless (cf. benchmarks/common.py)."""
+    as overrides (DESIGN.md §10.3/§10.4).  The serve engine no longer uses
+    this proxy: it probes with :func:`probe_switching_benefit_serve` over
+    its own lane runner (DESIGN.md §11.3)."""
     rng = np.random.default_rng(seed)
     sources = rng.integers(0, bd.n, runs)
     t_with = _timed_runs(
@@ -104,6 +111,85 @@ def _timed_runs(runner, sources, passes: int = 2) -> float:
             total += time.perf_counter() - t0
         best = min(best, total)
     return best
+
+
+def probe_switching_benefit_serve(
+    runner,
+    n: int,
+    eta: float = ETA_DEFAULT,
+    seed: int = 0,
+    *,
+    passes: int = 2,
+) -> SwitchingDecision:
+    """Serve-aware switching probe (DESIGN.md §11.3): time the kappa-lane
+    runner itself — one full batch of ``kappa`` random sources traversed to
+    completion — with and without the Eq. (6) policy, instead of the
+    single-source ``BucketedBfs`` proxy.
+
+    ``runner`` is duck-typed on the ``serve/bfs_engine._LaneRunner``
+    surface (``init_state``/``reseed``/``level``/``level_queued``/
+    ``active_set_mask``/``queue_len``/``active_vss``/``bucket_qids``),
+    passed in by the caller so this module needs no serve import.  The
+    traversal mirrors the engine's per-level loop: aggregate-frontier
+    decision, bucket guard, host-expanded queued sweeps.  Lanes that finish
+    early keep counting toward ``#unvisited`` until the whole batch drains
+    — the engine would have refilled them, so near-parity verdicts remain
+    heuristic, but unlike the single-source proxy the timed substrate,
+    kappa, and sweep kernels are exactly the ones the verdict will gate.
+
+    Warmup first (both variants, so the jit cache holds every per-level
+    bucket shape), then min over ``passes`` timed runs per variant, exactly
+    as in :func:`probe_switching_benefit`."""
+    import jax
+
+    rng = np.random.default_rng(seed)
+    sources = rng.integers(0, n, runner.kappa).astype(np.int32)
+    kappa = runner.kappa
+    bd = runner.bd
+
+    def traverse(policy_on: bool):
+        state = runner.init_state()
+        state = runner.reseed(state, np.ones(kappa, bool), sources, 0)
+        reach = np.ones(kappa, np.int64)
+        ell = 0
+        while True:
+            mode = "dense"
+            active_mask = None
+            if policy_on:
+                active_mask = runner.active_set_mask(state.f)
+                q_len = runner.queue_len(active_mask)
+                unvisited = int((n - reach).sum())
+                mode = decide_mode(unvisited, q_len, eta)
+                if blest.bucket_size(q_len) >= bd.num_vss_pad:
+                    mode = "dense"
+            ell += 1
+            if mode == "queued":
+                qids = runner.active_vss(active_mask)
+                state, new_lane = runner.level_queued(
+                    state, ell, runner.bucket_qids(qids))
+            else:
+                state, new_lane = runner.level(state, ell)
+            nl = np.asarray(new_lane)
+            reach += nl
+            if nl.sum() == 0 or ell >= bd.n_ext:
+                return state
+
+    for on in (True, False):  # warmup: compile every per-level shape
+        jax.block_until_ready(traverse(on).v)
+    times = {}
+    for on in (True, False):
+        best = float("inf")
+        for _ in range(passes):
+            t0 = time.perf_counter()
+            jax.block_until_ready(traverse(on).v)
+            best = min(best, time.perf_counter() - t0)
+        times[on] = best
+    return SwitchingDecision(
+        enabled=times[True] < times[False],
+        time_with=times[True],
+        time_without=times[False],
+        proxy="serve",
+    )
 
 
 def per_level_analysis(bd: blest.BvssDevice, src: int, eta: float = ETA_DEFAULT

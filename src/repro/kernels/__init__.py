@@ -1,4 +1,5 @@
 """Pallas TPU kernels for the BLEST hot spots (dense and frontier-compacted
-queued pulls, scatter-OR, frontier sweep) with jnp reference
-implementations; ``ops.py`` is the public wrapper layer that pads shapes
-and picks interpret mode off-TPU.  DESIGN.md §3, §10.1."""
+queued pulls, scatter-OR, the fused pull+scatter megatick level step) with
+jnp reference implementations; ``ops.py`` is the public wrapper layer that
+pads shapes and picks interpret mode off-TPU.  DESIGN.md §3, §10.1,
+§11.2."""

@@ -1,0 +1,117 @@
+"""Fused packed pull + scatter-OR — the megatick level step (DESIGN.md §11.2).
+
+The dense packed level was two kernels with an HBM round-trip between them:
+``pull_ms_packed`` materializes ``marks (N_q, tau, kw)`` uint32, then
+``scatter_or`` re-reads every one of those ``N_q*tau`` rows to OR them into
+the visited words.  At ``kw = kappa/32`` words per lane row that is
+``2 * N_q * tau * kw * 4`` bytes of marks traffic per level that exists only
+to connect the two grids.
+
+This kernel fuses them: one grid of ``n_rows + N_q*tau`` sequential steps,
+
+  * phase 1 (steps ``0..n_rows``): ``out[s] = v[s]``            (init copy)
+  * phase 2 (step ``n_rows + e``, ``e = q*tau + j``):
+        ``out[row_ids[q, j]] |= OR_{b : masks[q, j]_b = 1} F[v2r[q], b, :]``
+
+so each mark row is computed in registers from the mask byte and the parent
+frontier tile and ORed straight into the live output block — the marks
+array is never written.  Both indirections (``rows`` on the output side,
+``v2r`` composed through ``e // tau`` on the input side) ride scalar
+prefetch, exactly the §3.3 scatter pattern with the §3.2 pull inlined into
+phase 2.  TPU grid steps execute sequentially on a core, so duplicate
+destination rows read-modify-write in a well-defined order.
+
+The jnp twin composes the two kernels' references bit-for-bit; it is the
+CPU path of the serve engine's packed substrate (and the oracle in
+tests/test_megatick.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pull_ms_packed import pull_ms_packed_ref
+from repro.kernels.scatter_or import scatter_or_ref
+
+
+def _pull_scatter_kernel(rows_ref, v2r_ref, dest_ref, masks_ref, f_ref,
+                         out_ref, *, n_rows, sigma, tau):
+    del rows_ref, v2r_ref  # consumed by the index maps only
+    s = pl.program_id(0)
+    init_phase = s < n_rows
+    e = jnp.maximum(s - n_rows, 0)
+    j = e % tau                   # slot within the VSS
+    mask_row = masks_ref[...][0]  # (tau,) uint8
+    f = f_ref[...][0]             # (sigma, kw) uint32
+    m = jax.lax.dynamic_slice(mask_row, (j,), (1,))[0]
+    kw = f.shape[1]
+    acc = jnp.zeros((kw,), jnp.uint32)
+    for b in range(sigma):
+        sel = ((m >> b) & 1).astype(jnp.uint32)
+        # sel in {0,1}: 0-sel = all-ones / all-zeros word (multiply-free)
+        acc = acc | ((jnp.uint32(0) - sel) & f[b])
+    cur = out_ref[...]
+    out_ref[...] = jnp.where(init_phase, dest_ref[...], cur | acc[None])
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def pull_scatter_ms_packed(
+    v: jax.Array,          # (n_rows, kw) uint32 visited words
+    masks: jax.Array,      # (N_q, tau) uint8
+    f_packed: jax.Array,   # (num_sets_ext, sigma, kw) uint32 frontier words
+    v2r: jax.Array,        # (N_q,) int32
+    rows: jax.Array,       # (N_q*tau,) int32 — row_ids flattened
+    *,
+    sigma: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns ``v`` with the dense pull's marks OR-scattered in, without
+    materializing the marks array (duplicate-safe)."""
+    n_rows, kw = v.shape
+    n_q, tau = masks.shape
+    _, sig, kw_f = f_packed.shape
+    assert sig == sigma and kw_f == kw
+    t = rows.shape[0]
+    assert t == n_q * tau
+
+    def dest_index(s, rows_, v2r_):
+        return (jnp.where(s < n_rows, s, 0), 0)
+
+    def masks_index(s, rows_, v2r_):
+        return (jnp.clip(s - n_rows, 0, t - 1) // tau, 0)
+
+    def f_index(s, rows_, v2r_):
+        return (v2r_[jnp.clip(s - n_rows, 0, t - 1) // tau], 0, 0)
+
+    def out_index(s, rows_, v2r_):
+        e = jnp.clip(s - n_rows, 0, t - 1)
+        return (jnp.where(s < n_rows, s, rows_[e]), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_rows + t,),
+        in_specs=[
+            pl.BlockSpec((1, kw), dest_index),
+            pl.BlockSpec((1, tau), masks_index),
+            pl.BlockSpec((1, sigma, kw), f_index),
+        ],
+        out_specs=pl.BlockSpec((1, kw), out_index),
+    )
+    return pl.pallas_call(
+        functools.partial(_pull_scatter_kernel, n_rows=n_rows, sigma=sigma,
+                          tau=tau),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        interpret=interpret,
+    )(rows, v2r, v, masks, f_packed)
+
+
+def pull_scatter_ms_packed_ref(v, masks, f_packed, v2r, rows, sigma: int = 8):
+    """Oracle: the unfused pipeline — packed pull reference composed with the
+    bit-plane scatter-OR reference (bit-identical to the fused kernel)."""
+    marks = pull_ms_packed_ref(masks, f_packed[v2r], sigma=sigma)
+    return scatter_or_ref(v, rows, marks.reshape(-1, v.shape[1]))

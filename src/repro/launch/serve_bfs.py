@@ -4,7 +4,7 @@
     PYTHONPATH=src python -m repro.launch.serve_bfs \
         --families kron,road --scale 10 --requests 128 --kappa 32 \
         [--closeness-frac 0.25] [--cache-mb 64] [--verify] \
-        [--switching {auto,on,off}] [--eta 10.0]
+        [--switching {auto,on,off}] [--eta 10.0] [--megatick 64]
 
 Registers one graph per family, submits a randomly interleaved stream of
 BFS and closeness requests, drains the engine, and reports throughput plus
@@ -17,6 +17,11 @@ against the CPU oracle (bit-identical levels) — the serving analogue of
 and applies Eq. (6) only where it helps, ``on`` applies it everywhere,
 ``off`` forces the dense sweep (pre-switching behaviour).  ``--eta 0``
 with ``--switching on`` forces queued sweeps every level.
+
+``--megatick T`` (DESIGN.md §11) runs up to ``T`` consecutive dense levels
+per device dispatch inside a ``lax.while_loop`` — the fused on-device
+traversal; ``1`` (default) is the per-level engine.  The reported
+``host syncs/level`` drops below 1 once windows cover multiple levels.
 """
 from __future__ import annotations
 
@@ -48,6 +53,9 @@ def main():
     ap.add_argument("--eta", type=float, default=None,
                     help="Eq. (6) threshold (default: paper's 10.0; "
                          "0 forces queued sweeps under --switching on)")
+    ap.add_argument("--megatick", type=int, default=1,
+                    help="fused dense levels per device dispatch "
+                         "(DESIGN.md §11); 1 = per-level engine")
     ap.add_argument("--verify", action="store_true",
                     help="check BFS results against the CPU oracle")
     args = ap.parse_args()
@@ -63,6 +71,8 @@ def main():
         args.eta = ETA_DEFAULT
     elif args.eta < 0:
         ap.error(f"--eta must be >= 0, got {args.eta}")
+    if args.megatick < 1:
+        ap.error(f"--megatick must be >= 1, got {args.megatick}")
     unknown = [f.strip() for f in args.families.split(",")
                if f.strip() not in graphs.FAMILIES]
     if unknown:
@@ -74,7 +84,7 @@ def main():
                    if args.cache_mb is not None else None)
     eng = BfsEngine(kappa=args.kappa, cache_bytes=cache_bytes,
                     layout=args.layout, switching=args.switching,
-                    eta=args.eta)
+                    eta=args.eta, megatick=args.megatick)
 
     fleet = {}
     for fam in args.families.split(","):
@@ -105,6 +115,10 @@ def main():
     print(f"batches={s['batches']} levels={s['levels']} "
           f"(dense={s['levels_dense']} queued={s['levels_queued']}) "
           f"mid-flight admissions={s['admissions_midflight']}")
+    if s["levels"]:
+        print(f"megaticks={s['megaticks']} host_syncs={s['host_syncs']} "
+              f"({s['host_syncs'] / s['levels']:.2f}/level at "
+              f"megatick={args.megatick})")
     for name in fleet:
         art = eng.cache.peek(name)
         if art is None:
@@ -112,7 +126,8 @@ def main():
         sw = art.switching
         verdict = ("no probe (switching={})".format(args.switching)
                    if sw is None else
-                   f"probe {'enabled' if sw.enabled else 'disabled'} "
+                   f"probe[{sw.proxy}] "
+                   f"{'enabled' if sw.enabled else 'disabled'} "
                    f"(with={sw.time_with * 1e3:.1f}ms "
                    f"without={sw.time_without * 1e3:.1f}ms)")
         print(f"  {name}: reorder={art.reorder.algorithm} "

@@ -1,5 +1,6 @@
 """Serving engines: ``bfs_engine`` batches independent BFS/closeness
 queries into shared packed multi-source traversals with per-level
-dense/queued mode switching gated by a cached per-graph probe
-(DESIGN.md §6, §10); ``serve_loop`` is the LM decode continuous-batching
-engine the graph engine's slot-refill design mirrors."""
+dense/queued mode switching gated by a cached per-graph probe and an
+on-device megatick level loop once a graph's queue drains (DESIGN.md §6,
+§10, §11); ``serve_loop`` is the LM decode continuous-batching engine the
+graph engine's slot-refill design mirrors."""

@@ -27,13 +27,16 @@ Lane substrates
 Two bit-for-bit equivalent lane layouts implement the level step:
 
 * ``layout='packed'`` — the paper-faithful kappa-bit packed words
-  (``(n_ext, kappa/32)`` uint32) driven by the Pallas kernels
-  ``kernels/pull_ms_packed.py`` + ``kernels/scatter_or.py`` (or their jnp
-  references when ``use_pallas=False``).  1/8 the state traffic; the TPU
-  path.
+  (``(n_ext, kappa/32)`` uint32) driven by the fused
+  ``kernels/pull_scatter_ms_packed.py`` Pallas kernel for dense levels
+  (marks ORed straight into the visited words, DESIGN.md §11.2) and
+  ``kernels/pull_ms_packed_queued.py`` + ``kernels/scatter_or.py`` for
+  queued ones (or their jnp references when ``use_pallas=False``).  1/8
+  the state traffic; the TPU path.
 * ``layout='byteplane'`` — ``(n_ext, kappa)`` uint8 byte-planes using the
-  XLA-native scatter-max OR (``core/msbfs.py`` mechanics).  The fast path
-  on CPU backends, where Pallas interpret mode is impractical.
+  XLA-native scatter-max OR (``core/msbfs.py`` mechanics), slice-compacted
+  to the static nonzero-mask slot list on the jnp path (§11.2).  The fast
+  path on CPU backends, where Pallas interpret mode is impractical.
 
 ``layout='auto'`` picks packed on TPU, byteplane elsewhere.  Results are
 identical either way (tests/test_serve_engine.py asserts it), so the choice
@@ -51,32 +54,53 @@ all packed lanes:
 * ``queued`` — frontier-compacted: the union of active VSSs across lanes is
   expanded host-side (realPtrs ranges), bucket-padded to a power of two,
   and pulled via ``kernels/pull_ms_packed_queued.py`` (packed substrate,
-  scalar-prefetched double indirection) or an XLA take-based path
-  (byteplane); work ~ |Q| * tau.
+  scalar-prefetched double indirection, work ~ |Q| * tau) or an XLA
+  take-based path (byteplane; slice-compacted through ``_nz_ptrs`` on the
+  jnp path, work ~ |active slices| — §11.2).
 
 Whether the policy runs at all is the ``switching`` knob: ``'off'`` forces
 dense (legacy behaviour), ``'on'`` applies Eq. (6) unconditionally, and
-``'auto'`` defers to the paper's per-graph preprocessing probe
-(``probe_switching_benefit``), which :class:`GraphCache` runs once per
-admitted graph and caches in the artifact (DESIGN.md §10.3).  Switching is
+``'auto'`` defers to the per-graph preprocessing probe — the serve-aware
+``probe_switching_benefit_serve``, which times this engine's own lane
+runner (DESIGN.md §11.3) — run once per admitted graph by
+:class:`GraphCache` and cached in the artifact (DESIGN.md §10.3).  Switching is
 performance-only: results stay bit-identical to ``core/ref_bfs.py`` in
 every mode (``eta=0`` with ``switching='on'`` forces queued every level;
 tests/test_serve_switching.py pins all three against the oracle).
 
-Per-lane state (either layout) also carries:
+Per-lane state (either layout) also carries ``levels`` (n_ext, kappa)
+int32 — *global* level stamps.  A lane stamps its discoveries with the
+global level counter; extraction subtracts the lane's admission level
+(tracked host-side per lane), so mid-flight admission needs no per-lane
+loop skew handling.  Per-lane ``reach`` and the Eq.(7) ``far`` sum
+(single-source closeness) are accumulated host-side in int64 from the
+per-level new-vertex counts the level step already returns — the device
+int32 would overflow on paper-scale graphs (cf. core/closeness.py), and a
+device reach column would only mirror what the host tracks anyway.
 
-* ``levels`` (n_ext, kappa) int32 — *global* level stamps.  A lane stamps
-  its discoveries with the global level counter; extraction subtracts the
-  lane's admission level (tracked host-side per lane), so mid-flight
-  admission needs no per-lane loop skew handling.
-* ``reach`` (kappa,) int32 — per-lane visited counts.  The Eq.(7) ``far``
-  sum (single-source closeness) is accumulated host-side in int64 from the
-  per-level new-vertex counts — the device int32 would overflow on
-  paper-scale graphs (cf. core/closeness.py).
+Megatick traversal (DESIGN.md §11)
+----------------------------------
+``BfsEngine(megatick=T)`` with ``T > 1`` moves the per-graph level loop
+on-device: up to ``T`` consecutive dense levels run inside one
+``jax.lax.while_loop`` dispatch (pull+scatter via the fused
+``kernels/pull_scatter_ms_packed.py`` on the packed substrate, diff, level
+stamps, per-lane reach, the Eq. (6) decision, and per-lane done flags all
+stay resident), returning to host only when every active lane has
+finished, when the policy picks a queued level (executed host-side with
+the §10 bucketed machinery, then the loop re-enters), or when ``T`` ticks
+elapse.  Scheduling is queue-aware: windows engage once a graph's queue
+has drained; under backlog the engine keeps the per-level path so a freed
+slot is refilled the very next level — continuous batching semantics are
+those of ``T = 1`` exactly.  A lane finishing inside a window *parks*
+(its empty frontier freezes its columns), and extraction at window end
+reads what extraction at the finish tick would have.  ``megatick=1`` is
+the legacy per-level engine, bit-identical results either way
+(tests/test_megatick.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from collections import OrderedDict, deque
 from typing import NamedTuple
@@ -93,9 +117,10 @@ from repro.core.bvss import Bvss, BvssConfig, build_bvss
 from repro.core.graph import Graph
 from repro.core.msbfs_packed import frontier_planes, unpack_levels_check
 from repro.kernels import ops
-from repro.kernels.pull_ms_packed import pull_ms_packed, pull_ms_packed_ref
 from repro.kernels.pull_ms_packed_queued import (
     pull_ms_packed_queued, pull_ms_packed_queued_ref)
+from repro.kernels.pull_scatter_ms_packed import (
+    pull_scatter_ms_packed, pull_scatter_ms_packed_ref)
 from repro.kernels.scatter_or import scatter_or, scatter_or_ref
 
 SWITCHING_MODES = ("auto", "on", "off")
@@ -173,11 +198,14 @@ def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
                     config: BvssConfig | None = None,
                     probe: bool = False,
                     eta: float = switching_mod.ETA_DEFAULT,
-                    probe_use_pallas: bool = False) -> GraphArtifacts:
+                    probe_use_pallas: bool = False,
+                    probe_runner=None) -> GraphArtifacts:
     """Preprocess ``g`` for serving: reorder -> BVSS -> device arrays, plus
-    (``probe=True``) the paper's switching probe — 3 BFS runs from random
-    sources with and without Eq. (6) switching — whose verdict is cached in
-    the artifact."""
+    (``probe=True``) the paper's switching probe, whose verdict is cached
+    in the artifact.  ``probe_runner`` (a ``bd -> runner`` factory, supplied
+    by :class:`BfsEngine`) switches the probe from the single-source
+    ``BucketedBfs`` proxy to the serve-aware variant that times the
+    kappa-lane runner itself (DESIGN.md §11.3)."""
     config = config or BvssConfig()
     rr = reorder_mod.reorder(g, sigma=config.sigma, force=reorder)
     gp = g.permuted(rr.perm)
@@ -185,8 +213,12 @@ def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
     bd = blest.to_device(b)
     sw = None
     if probe:
-        sw = switching_mod.probe_switching_benefit(
-            bd, eta=eta, use_pallas=probe_use_pallas)
+        if probe_runner is not None:
+            sw = switching_mod.probe_switching_benefit_serve(
+                probe_runner(bd), g.n, eta=eta)
+        else:
+            sw = switching_mod.probe_switching_benefit(
+                bd, eta=eta, use_pallas=probe_use_pallas)
     arrays = [bd.masks, bd.row_ids, bd.v2r, bd.real_ptrs]
     if bd.masks_packed is not bd.masks:  # aliased when tau % 4 != 0
         arrays.append(bd.masks_packed)
@@ -215,12 +247,14 @@ class GraphCache:
                  config: BvssConfig | None = None, *,
                  probe: bool = False,
                  eta: float = switching_mod.ETA_DEFAULT,
-                 probe_use_pallas: bool = False):
+                 probe_use_pallas: bool = False,
+                 probe_runner=None):
         self.max_bytes = max_bytes
         self.config = config or BvssConfig()
         self.probe = probe
         self.eta = eta
         self.probe_use_pallas = probe_use_pallas
+        self.probe_runner = probe_runner
         self._specs: dict[str, tuple[Graph, str | None]] = {}
         self._entries: OrderedDict[str, GraphArtifacts] = OrderedDict()
         self.hits = 0
@@ -276,7 +310,8 @@ class GraphCache:
         g, reorder = self._specs[name]
         art = build_artifacts(name, g, reorder=reorder, config=self.config,
                               probe=self.probe, eta=self.eta,
-                              probe_use_pallas=self.probe_use_pallas)
+                              probe_use_pallas=self.probe_use_pallas,
+                              probe_runner=self.probe_runner)
         self._entries[name] = art
         self._entries.move_to_end(name)
         self._shrink()
@@ -304,12 +339,13 @@ class GraphCache:
 class LaneState(NamedTuple):
     """Device arrays for kappa in-flight lanes (both layouts share this
     shape-polymorphic container; packed uses uint32 words, byteplane uint8
-    columns)."""
+    columns).  Per-lane reach is *not* here: it is mirrored host-side from
+    the per-level new counts (`reach_host` in ``BfsEngine._drain_graph``)
+    and a device column would only be read back at extraction."""
 
     v: jax.Array        # (n_ext, kw) uint32 | (n_ext, kappa) uint8 visited
     f: jax.Array        # (num_sets_ext, sigma, width) frontier tiles
     levels: jax.Array   # (n_ext, kappa) int32 — global level stamps
-    reach: jax.Array    # (kappa,) int32 — per-lane visited counts
 
 
 class _LaneRunner:
@@ -346,20 +382,66 @@ class _LaneRunner:
         self._active_fn = jax.jit(lambda f: (f != 0).any(axis=(1, 2)))
         self._real_ptrs = np.asarray(bd.real_ptrs)
         self._pad_vss = bd.num_vss  # a guaranteed padding VSS id
+        self._rows_flat = bd.row_ids.reshape(-1)  # fused-kernel scatter rows
+        self._compact = layout == "byteplane" and not use_pallas
+        if self._compact:
+            # slice-compacted pulls (§11.2): the (num_vss_pad, tau) grid is
+            # mostly padding (zero masks -> zero marks -> no-op scatter
+            # rows); the nonzero-mask slot list is static per graph, so the
+            # XLA path builds marks and scatters over S = num_slices rows
+            # instead of num_vss_pad * tau.  The arrays stay ordered by
+            # (vss, slot) and `_nz_ptrs` maps a VSS to its slice range, so
+            # queued sweeps expand active VSSs to exactly their real
+            # slices; entry S is a sentinel (zero mask, sentinel row) that
+            # pads queued buckets.
+            mask_np = np.asarray(bd.masks)
+            nz_vss, nz_slot = np.nonzero(mask_np)
+            self._nz_ptrs = np.zeros(bd.num_vss_pad + 1, np.int64)
+            np.cumsum(np.bincount(nz_vss, minlength=bd.num_vss_pad),
+                      out=self._nz_ptrs[1:])
+            mask_c = np.append(mask_np[nz_vss, nz_slot], 0).astype(np.uint8)
+            parent_c = np.append(np.asarray(bd.v2r)[nz_vss], bd.num_sets)
+            rows_c = np.append(np.asarray(bd.row_ids)[nz_vss, nz_slot],
+                               bd.n_pad)
+            self._nz_mask = jnp.asarray(mask_c)
+            self._nz_parent = jnp.asarray(parent_c.astype(np.int32))
+            self._nz_rows = jnp.asarray(rows_c.astype(np.int32))
+            self._pad_slice = int(mask_c.size - 1)  # the sentinel entry
+        # megatick residency (DESIGN.md §11.1): per-set VSS counts for the
+        # on-device |Q|, the bucket-guard threshold (smallest |Q| whose
+        # padded bucket reaches the full sweep), and jitted drivers per
+        # (T, policy) pair
+        self._set_counts = bd.real_ptrs[1:] - bd.real_ptrs[:-1]
+        if bucket_size(1) >= bd.num_vss_pad:
+            self._dense_guard = 0
+        else:
+            self._dense_guard = (1 << (bd.num_vss_pad - 1).bit_length()) // 2 + 1
+        self._megatick_fns: dict[tuple[int, bool, float], object] = {}
+        self._init_state: LaneState | None = None
+        self._reach_zero = jnp.zeros(kappa, jnp.int32)  # policy-off filler
+        # extraction gather: slice the finished lanes' level columns on
+        # device before the host copy; re-traced per power-of-two bucket of
+        # len(done), so at most log2(kappa)+1 shapes ever compile
+        self._gather_cols_fn = jax.jit(
+            lambda levels, idx: levels[: bd.n][:, idx])
 
     # ---- state ------------------------------------------------------------
     def init_state(self) -> LaneState:
-        bd, kappa = self.bd, self.kappa
-        if self.layout == "packed":
-            v = jnp.zeros((bd.n_ext, self.kw), jnp.uint32)
-        else:
-            v = jnp.zeros((bd.n_ext, kappa), jnp.uint8)
-        return LaneState(
-            v=v,
-            f=self._planes(v),
-            levels=jnp.full((bd.n_ext, kappa), UNREACHED, jnp.int32),
-            reach=jnp.zeros(kappa, jnp.int32),
-        )
+        """The all-empty lane state.  Immutable device arrays, so the one
+        instance is built lazily and shared by every batch session (a fresh
+        build per drain was measurable host overhead)."""
+        if self._init_state is None:
+            bd, kappa = self.bd, self.kappa
+            if self.layout == "packed":
+                v = jnp.zeros((bd.n_ext, self.kw), jnp.uint32)
+            else:
+                v = jnp.zeros((bd.n_ext, kappa), jnp.uint8)
+            self._init_state = LaneState(
+                v=v,
+                f=self._planes(v),
+                levels=jnp.full((bd.n_ext, kappa), UNREACHED, jnp.int32),
+            )
+        return self._init_state
 
     def _planes(self, v_or_diff):
         """visited/diff rows -> (num_sets_ext, sigma, width) frontier tiles."""
@@ -372,32 +454,46 @@ class _LaneRunner:
             if self.use_pallas:
                 marks = ops.pull_ms(bd.masks, f, bd.v2r, sigma=bd.sigma,
                                     use_pallas=True)
-            else:
-                # bitwise OR-of-selected-planes pull: ~4x faster than the
-                # float einsum in kernels/ref.py on CPU backends
-                ft = f[bd.v2r]  # (N_q, sigma, kappa) uint8 bit-planes
-                marks = jnp.zeros(
-                    (*bd.masks.shape, self.kappa), jnp.uint8)
-                for b in range(bd.sigma):
-                    sel = ((bd.masks >> b) & 1)[:, :, None]
-                    marks = marks | (sel * ft[:, b][:, None, :])
-            return v.at[bd.row_ids.ravel()].max(
-                marks.reshape(-1, self.kappa))
+                return v.at[bd.row_ids.ravel()].max(
+                    marks.reshape(-1, self.kappa))
+            # slice-compacted bitwise OR-of-selected-planes pull (§11.2):
+            # marks and scatter rows over the static nonzero-slice list
+            # only — zero-mask slots could never contribute, and XLA CPU
+            # scatter cost is linear in rows
+            ft = f[self._nz_parent]  # (S, sigma, kappa) uint8 bit-planes
+            marks = jnp.zeros((self._nz_mask.shape[0], self.kappa),
+                              jnp.uint8)
+            for b in range(bd.sigma):
+                sel = ((self._nz_mask >> b) & 1)[:, None]
+                marks = marks | (sel * ft[:, b])
+            return v.at[self._nz_rows].max(marks)
+        # fused pull+scatter (DESIGN.md §11.2): marks are computed in
+        # registers and ORed straight into the visited words — no
+        # (N_q*tau, kw) marks array between the pull and the scatter
         if self.use_pallas:
-            marks = pull_ms_packed(bd.masks, f, bd.v2r, sigma=bd.sigma,
-                                   interpret=self._interpret)
-            return scatter_or(v, bd.row_ids.reshape(-1),
-                              marks.reshape(-1, self.kw),
-                              interpret=self._interpret)
-        marks = pull_ms_packed_ref(bd.masks, f[bd.v2r], sigma=bd.sigma)
-        return scatter_or_ref(v, bd.row_ids.reshape(-1),
-                              marks.reshape(-1, self.kw))
+            return pull_scatter_ms_packed(v, bd.masks, f, bd.v2r,
+                                          self._rows_flat, sigma=bd.sigma,
+                                          interpret=self._interpret)
+        return pull_scatter_ms_packed_ref(v, bd.masks, f, bd.v2r,
+                                          self._rows_flat, sigma=bd.sigma)
 
     def _pull_scatter_queued(self, v, f, qids):
-        """Frontier-compacted pull+scatter over the active VSS list only
-        (DESIGN.md §10.1): work ~ |Q| * tau instead of N_v * tau."""
+        """Frontier-compacted pull+scatter over the active list only
+        (DESIGN.md §10.1): work ~ |Q| * tau instead of N_v * tau — or
+        ~ |active slices| on the slice-compacted path, where ``qids`` are
+        slice ids (``bucket_qids`` expands VSS ids through ``_nz_ptrs``)."""
         bd = self.bd
         if self.layout == "byteplane":
+            if self._compact:
+                # slice-compacted queued pull (§11.2): gather the active
+                # slices' mask bytes / parent tiles / rows directly
+                mask_q = self._nz_mask[qids]        # (B,) uint8
+                ft = f[self._nz_parent[qids]]       # (B, sigma, kappa)
+                marks = jnp.zeros((qids.shape[0], self.kappa), jnp.uint8)
+                for b in range(bd.sigma):
+                    sel = ((mask_q >> b) & 1)[:, None]
+                    marks = marks | (sel * ft[:, b])
+                return v.at[self._nz_rows[qids]].max(marks)
             # XLA take-based queued path: gather the queued masks/rows/parent
             # tiles, then the same OR-of-selected-planes pull as dense.  (The
             # MXU byteplane kernel is deliberately not given a queued twin —
@@ -438,7 +534,6 @@ class _LaneRunner:
             v=v_next,
             f=self._planes(diff),
             levels=jnp.where(bits == 1, ell, state.levels),
-            reach=state.reach + new_lane,
         ), new_lane
 
     def _level(self, state: LaneState, ell):
@@ -478,12 +573,124 @@ class _LaneRunner:
         return expand_active_sets(self._real_ptrs, active_mask)
 
     def bucket_qids(self, qids: np.ndarray) -> np.ndarray:
-        """Pad the active list to a power-of-two bucket with padding VSS
-        ids (zero masks, sentinel rows), bounding jit re-traces."""
+        """Pad the active list to a power-of-two bucket with padding ids
+        (zero masks, sentinel rows), bounding jit re-traces.  On the
+        slice-compacted substrate the VSS ids are first expanded to their
+        real nonzero-slice ranges (``_nz_ptrs``), so queued work tracks
+        the active slice count, not |Q| * tau."""
+        pad = self._pad_vss
+        if self._compact:
+            starts = self._nz_ptrs[qids]
+            counts = self._nz_ptrs[qids + 1] - starts
+            total = int(counts.sum())
+            if total:
+                which = np.repeat(np.arange(qids.size), counts)
+                offs = np.arange(total) - np.repeat(
+                    np.cumsum(counts) - counts, counts)
+                qids = (starts[which] + offs).astype(np.int32)
+            else:
+                qids = np.zeros(0, np.int32)
+            pad = self._pad_slice
         bs = bucket_size(qids.size)
-        padded = np.full(bs, self._pad_vss, np.int32)
+        padded = np.full(bs, pad, np.int32)
         padded[: qids.size] = qids
         return padded
+
+    # ---- megatick: up to T fused dense levels per dispatch (§11.1) --------
+    def megatick(self, state: LaneState, reach: np.ndarray, ell0: int,
+                 active, admitted_at, eta: float,
+                 *, ticks: int, policy_on: bool):
+        """Run up to ``ticks`` consecutive dense levels in one
+        ``lax.while_loop`` dispatch; returns ``(state', new_hist)`` where
+        ``new_hist`` is (ticks, kappa) int32 per-level new-vertex counts
+        with unexecuted rows left at -1 (the host derives the executed tick
+        count from them — one transfer carries the whole window's
+        bookkeeping).
+
+        Exit conditions, beyond ``ticks`` elapsing: every active lane
+        finishing (results are due); or, under an active policy, Eq. (6)
+        picking a queued level — which the host executes with the §10
+        bucketed machinery before re-entering.  The engine only opens a
+        window when the graph's queue is empty, so a lane finishing early
+        parks inside the window instead of forcing an exit: its frontier
+        is empty so its levels column, reach, and far contributions are
+        all frozen (every later ``new`` count is zero), and extraction at
+        window end reads exactly what extraction at the finish tick would
+        have.
+
+        ``active``/``admitted_at`` may be device arrays (the engine caches
+        them across windows — they only change at admission) and ``eta`` is
+        a compile-time constant, so steady-state windows upload at most the
+        policy's reach mirror.  ``reach`` is ignored unless ``policy_on``."""
+        key = (int(ticks), bool(policy_on), float(eta))
+        fn = self._megatick_fns.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                self._megatick, T=int(ticks), policy_on=bool(policy_on),
+                eta=float(eta)))
+            self._megatick_fns[key] = fn
+        reach_dev = (jnp.asarray(reach, jnp.int32) if policy_on
+                     else self._reach_zero)
+        return fn(state, reach_dev, jnp.int32(ell0),
+                  jnp.asarray(active, bool),
+                  jnp.asarray(admitted_at, jnp.int32))
+
+    def _megatick(self, state: LaneState, reach, ell0, active, admitted_at,
+                  *, T: int, policy_on: bool, eta: float):
+        bd = self.bd
+
+        def cond(carry):
+            st, reach, tick, done, hist = carry
+            live = active & ~done
+            go = (tick < T) & live.any()
+            if policy_on:
+                # the §10.2 decision, fully on device: |Q| from the union
+                # frontier through real_ptrs, #unvisited from the resident
+                # per-lane reach.  Eq. (6) compares in float32 (the host
+                # path uses Python floats); a flip at the exact boundary
+                # changes the sweep shape only, never the results.  The
+                # unvisited sum is accumulated in float32 too: it reaches
+                # kappa*n, which would wrap an int32 at paper scale (the
+                # host mirror is int64 for the same reason), while float32
+                # merely rounds.
+                af = self._active_fn(st.f)[: bd.num_sets]
+                q_len = jnp.where(af, self._set_counts, 0).sum()
+                unvisited = jnp.where(
+                    active, (bd.n - reach).astype(jnp.float32), 0.0).sum()
+                dense = unvisited < eta * q_len.astype(jnp.float32)
+                dense = dense | (q_len >= self._dense_guard)  # bucket guard
+                go = go & dense
+            return go
+
+        def body(carry):
+            st, reach, tick, done, hist = carry
+            ell = ell0 + tick + 1
+            st, new_lane = self._level(st, ell)
+            # new counts are monotone-absorbing at zero (an empty lane
+            # frontier stays empty), so |= is exact
+            done = done | (active & ((new_lane == 0)
+                                     | (ell - admitted_at >= bd.n_ext)))
+            return (st, reach + new_lane, tick + 1, done,
+                    hist.at[tick].set(new_lane))
+
+        hist0 = jnp.full((T, self.kappa), -1, jnp.int32)
+        done0 = jnp.zeros(self.kappa, bool)
+        state, _reach, _tick, _done, hist = jax.lax.while_loop(
+            cond, body,
+            (state, reach, jnp.int32(0), done0, hist0))
+        return state, hist
+
+    # ---- extraction gather (§11.3) ----------------------------------------
+    def gather_level_cols(self, levels, cols: list[int]) -> np.ndarray:
+        """Finished lanes' level columns, sliced on device before the host
+        copy: (n, len(cols)) int32.  The column list is padded to a
+        power-of-two bucket (duplicates of the first id) so the jitted
+        gather compiles at most log2(kappa)+1 shapes."""
+        b = min(self.kappa, 1 << (len(cols) - 1).bit_length())
+        idx = np.full(b, cols[0], np.int32)
+        idx[: len(cols)] = cols
+        out = np.asarray(self._gather_cols_fn(levels, jnp.asarray(idx)))
+        return out[:, : len(cols)]
 
     # ---- clear + seed a subset of lanes -----------------------------------
     def _reseed(self, state: LaneState, clear, new_src, ell):
@@ -515,10 +722,7 @@ class _LaneRunner:
         levels = jnp.where(clear[None, :], UNREACHED, state.levels)
         levels = levels.at[src, lanes].set(
             jnp.where(has, ell, levels[src, lanes]))
-        return LaneState(
-            v=v, f=f, levels=levels,
-            reach=jnp.where(clear, has.astype(jnp.int32), state.reach),
-        )
+        return LaneState(v=v, f=f, levels=levels)
 
     def _lane_word_mask(self, clear):
         shifts = jnp.arange(32, dtype=jnp.uint32)
@@ -561,7 +765,8 @@ class BfsEngine:
                  config: BvssConfig | None = None,
                  reorder: str | None = None, keep_results: bool = False,
                  switching: str = "auto",
-                 eta: float = switching_mod.ETA_DEFAULT):
+                 eta: float = switching_mod.ETA_DEFAULT,
+                 megatick: int = 1):
         if kappa % 32 != 0 or kappa <= 0:
             raise ValueError("kappa must be a positive multiple of 32")
         if switching not in SWITCHING_MODES:
@@ -569,19 +774,26 @@ class BfsEngine:
                 f"switching must be one of {SWITCHING_MODES}, got {switching!r}")
         if eta < 0:
             raise ValueError(f"eta must be >= 0, got {eta}")
+        if megatick < 1:
+            raise ValueError(f"megatick must be >= 1, got {megatick}")
         self.kappa = kappa
         self.layout = layout
         self.use_pallas = use_pallas
         self.default_reorder = reorder
         self.switching = switching
         self.eta = float(eta)
+        self.megatick = int(megatick)
         # probe timings in Pallas interpret mode are meaningless (see
         # benchmarks/common.py), so the probe only uses Pallas on real TPUs
-        probe_pallas = (jax.default_backend() == "tpu"
-                        and use_pallas is not False)
+        self._probe_pallas = (jax.default_backend() == "tpu"
+                              and use_pallas is not False)
+        self._probe_runner_last: _LaneRunner | None = None
+        # serve-aware probe (DESIGN.md §11.3): time the engine's own lane
+        # runner dense vs policy, not the single-source BucketedBfs proxy
         self.cache = GraphCache(max_bytes=cache_bytes, config=config,
                                 probe=(switching == "auto"), eta=self.eta,
-                                probe_use_pallas=probe_pallas)
+                                probe_use_pallas=self._probe_pallas,
+                                probe_runner=self._make_probe_runner)
         self.cache.on_evict(self._drop_runner)
         self._runners: dict[str, _LaneRunner] = {}
         self._queues: OrderedDict[str, deque[BfsQuery]] = OrderedDict()
@@ -594,6 +806,7 @@ class BfsEngine:
             "queries": 0, "batches": 0, "levels": 0,
             "admissions_midflight": 0,
             "levels_dense": 0, "levels_queued": 0,
+            "megaticks": 0, "host_syncs": 0,
         }
 
     # ---- registration / admission -----------------------------------------
@@ -637,11 +850,36 @@ class BfsEngine:
             self.results.update(out)
         return out
 
+    def _make_probe_runner(self, bd: BvssDevice) -> _LaneRunner:
+        r = _LaneRunner(bd, self.kappa, layout=self.layout,
+                        use_pallas=self._probe_pallas)
+        self._probe_runner_last = r
+        return r
+
+    def _adopt_probe_runner(self, bd: BvssDevice) -> _LaneRunner | None:
+        """The probe's runner is jit-warm for every per-level shape of this
+        graph; adopt it for serving instead of compiling a twin, when its
+        resolved layout/kernel config matches the engine's."""
+        r, self._probe_runner_last = self._probe_runner_last, None
+        if r is None or r.bd is not bd:
+            return None
+        want_layout = self.layout
+        if want_layout == "auto":
+            want_layout = ("packed" if jax.default_backend() == "tpu"
+                           else "byteplane")
+        want_pallas = self.use_pallas
+        if want_pallas is None:
+            want_pallas = jax.default_backend() == "tpu"
+        if r.layout == want_layout and r.use_pallas == want_pallas:
+            return r
+        return None
+
     def _runner_for(self, name: str, bd: BvssDevice) -> _LaneRunner:
         r = self._runners.get(name)
         if r is None or r.bd is not bd:
-            r = _LaneRunner(bd, self.kappa, layout=self.layout,
-                            use_pallas=self.use_pallas)
+            r = (self._adopt_probe_runner(bd)
+                 or _LaneRunner(bd, self.kappa, layout=self.layout,
+                                use_pallas=self.use_pallas))
             self._runners[name] = r
         return r
 
@@ -665,6 +903,7 @@ class BfsEngine:
         runner = self._runner_for(name, art.bd)
         self.stats["batches"] += 1
         kappa = self.kappa
+        n = art.graph.n
         lanes: list[BfsQuery | None] = [None] * kappa
         admitted_at = np.zeros(kappa, np.int32)
         # Eq.(7) far accumulated host-side in int64: the device int32 lane
@@ -678,10 +917,19 @@ class BfsEngine:
         policy_on = self._policy_active(art)
         state = runner.init_state()
         ell = 0
+        # device copies of the lane metadata the megatick window reads;
+        # rebuilt only when the lane set changes (admission / extraction)
+        meta_dev = None
+        # queued-streak guard: after a window exits on a queued verdict,
+        # stay on the per-level path until the policy picks dense again —
+        # otherwise a queued-dominant traversal would pay a no-op window
+        # dispatch plus a history transfer on every single level
+        prefer_host = False
         while True:
             # ---- admission: refill free lanes from the queue -------------
             free = [i for i in range(kappa) if lanes[i] is None]
             if free and queue:
+                meta_dev = None
                 clear = np.zeros(kappa, bool)
                 new_src = np.full(kappa, -1, np.int32)
                 for i in free:
@@ -699,23 +947,76 @@ class BfsEngine:
                 state = runner.reseed(state, clear, new_src, ell)
             if all(q is None for q in lanes):
                 break
-            # ---- mode decision over the aggregate frontier (§10.2) -------
-            # counts first, ids later: the decision needs only |Q|; the id
-            # list is expanded on the queued branch alone, so dense levels
-            # under an active policy skip the O(|Q|) host expansion
-            mode = "dense"
-            active_mask = None
-            if policy_on:
+            active_arr = np.fromiter((q is not None for q in lanes), bool,
+                                     kappa)
+            # ---- megatick window: up to T fused dense levels (§11.1) -----
+            # windows run when this graph's queue is drained; under backlog
+            # the per-level path keeps admission immediate (a window exiting
+            # on every lane-finish to admit degenerates to per-level ticks
+            # that still pay the window overhead)
+            if self.megatick > 1 and not queue and not prefer_host:
+                if meta_dev is None:
+                    meta_dev = (jnp.asarray(active_arr),
+                                jnp.asarray(admitted_at, jnp.int32))
+                state, hist = runner.megatick(
+                    state, reach_host.astype(np.int32), ell, meta_dev[0],
+                    meta_dev[1], self.eta, ticks=self.megatick,
+                    policy_on=policy_on)
+                hist = np.asarray(hist)
+                self.stats["host_syncs"] += 1
+                # unexecuted rows stay -1: the one transfer above carries
+                # both the executed tick count and every level's counts
+                ticks = int((hist[:, 0] >= 0).sum())
+                if ticks:
+                    self.stats["megaticks"] += 1
+                    self.stats["levels"] += ticks
+                    self.stats["levels_dense"] += ticks
+                    w = hist[:ticks].astype(np.int64)
+                    ells = ell + 1 + np.arange(ticks, dtype=np.int64)
+                    reach_host += w.sum(axis=0)
+                    far64 += ((ells[:, None] - admitted_at[None, :])
+                              * w).sum(axis=0)
+                    ell += ticks
+                    # lane new counts are monotone-absorbing at zero, so
+                    # the last row flags every lane that finished anywhere
+                    # in the window
+                    if self._finish_tick(art, runner, state, lanes, hist[
+                            ticks - 1], admitted_at, far64, reach_host, ell,
+                            out):
+                        meta_dev = None
+                        continue  # freed lanes: admit before the next window
+                    if ticks == self.megatick:
+                        continue  # window exhausted with every lane active
+                # the window stopped short of T with no lane finished: the
+                # on-device Eq. (6) verdict was queued — run that one level
+                # host-side with the §10 bucketed machinery, and stay on
+                # the per-level path while the verdict keeps being queued
+                mode = "queued"
+                prefer_host = True
                 active_mask = runner.active_set_mask(state.f)
-                q_len = runner.queue_len(active_mask)
-                unvisited = int(sum(art.graph.n - reach_host[i]
-                                    for i in range(kappa)
-                                    if lanes[i] is not None))
-                mode = switching_mod.decide_mode(unvisited, q_len, self.eta)
-                # bucket guard: a padded queue as large as the full VSS
-                # sweep can only lose to dense (gather overhead, no savings)
-                if bucket_size(q_len) >= art.bd.num_vss_pad:
-                    mode = "dense"
+                self.stats["host_syncs"] += 1
+            else:
+                # ---- mode decision over the aggregate frontier (§10.2) ---
+                # counts first, ids later: the decision needs only |Q|; the
+                # id list is expanded on the queued branch alone, so dense
+                # levels under a policy skip the O(|Q|) host expansion
+                mode = "dense"
+                active_mask = None
+                if policy_on:
+                    active_mask = runner.active_set_mask(state.f)
+                    self.stats["host_syncs"] += 1
+                    q_len = runner.queue_len(active_mask)
+                    unvisited = int(np.where(active_arr, n - reach_host,
+                                             0).sum())
+                    mode = switching_mod.decide_mode(unvisited, q_len,
+                                                     self.eta)
+                    # bucket guard: a padded queue as large as the full VSS
+                    # sweep can only lose to dense (gather overhead, no
+                    # savings)
+                    if bucket_size(q_len) >= art.bd.num_vss_pad:
+                        mode = "dense"
+                if mode == "dense":
+                    prefer_host = False  # dense again: windows may resume
             # ---- one level for every lane --------------------------------
             ell += 1
             if mode == "queued":
@@ -728,43 +1029,62 @@ class BfsEngine:
                 self.stats["levels_dense"] += 1
             self.stats["levels"] += 1
             nl = np.asarray(new_lane)
+            self.stats["host_syncs"] += 1
             reach_host += nl
             far64 += (ell - admitted_at).astype(np.int64) * nl
-            # ---- per-lane early exit -------------------------------------
-            done = [i for i in range(kappa) if lanes[i] is not None
-                    and (nl[i] == 0 or ell - admitted_at[i] >= art.bd.n_ext)]
-            if done:
-                self._extract(art, state, lanes, done, admitted_at, far64,
-                              out)
-                for i in done:
-                    lanes[i] = None
+            if self._finish_tick(art, runner, state, lanes, nl, admitted_at,
+                                 far64, reach_host, ell, out):
+                meta_dev = None
 
-    def _extract(self, art: GraphArtifacts, state: LaneState,
-                 lanes: list, done: list[int], admitted_at: np.ndarray,
-                 far64: np.ndarray, out: dict[int, BfsResult]) -> None:
+    def _finish_tick(self, art: GraphArtifacts, runner: _LaneRunner,
+                     state: LaneState, lanes: list, nl: np.ndarray,
+                     admitted_at: np.ndarray, far64: np.ndarray,
+                     reach_host: np.ndarray, ell: int,
+                     out: dict[int, BfsResult]) -> bool:
+        """Per-lane early exit after a level (or megatick window): extract
+        and free every finished lane; True iff any lane was freed."""
+        done = [i for i in range(self.kappa) if lanes[i] is not None
+                and (nl[i] == 0 or ell - admitted_at[i] >= art.bd.n_ext)]
+        if not done:
+            return False
+        self._extract(art, runner, state, lanes, done, admitted_at, far64,
+                      reach_host, out)
+        for i in done:
+            lanes[i] = None
+        return True
+
+    def _extract(self, art: GraphArtifacts, runner: _LaneRunner,
+                 state: LaneState, lanes: list, done: list[int],
+                 admitted_at: np.ndarray, far64: np.ndarray,
+                 reach_host: np.ndarray,
+                 out: dict[int, BfsResult]) -> None:
         n = art.graph.n
-        # host-side numpy indexing: a jnp fancy-index here would trace and
-        # compile a fresh XLA gather per distinct `done` pattern.  The
-        # transfer is skipped outright when every finished lane is a
-        # closeness query (levels would be discarded).
-        cols = None
-        if any(lanes[i].kind == KIND_BFS for i in done):
-            cols = np.asarray(state.levels)[:n][:, done]
-        reaches = np.asarray(state.reach)
-        for k, i in enumerate(done):
+        # the done columns are sliced on device (bucketed static-shape
+        # gather, §11.3) so the host copy is (n, |done|), not the full
+        # (n_ext, kappa) levels array; skipped outright when every finished
+        # lane is a closeness query (levels would be discarded)
+        bfs_done = [i for i in done if lanes[i].kind == KIND_BFS]
+        cols = {}
+        if bfs_done:
+            arr = runner.gather_level_cols(state.levels, bfs_done)
+            self.stats["host_syncs"] += 1
+            # one vectorized admission-offset subtraction + permutation for
+            # every finished column (a per-lane loop here was measurable)
+            lv = np.where(arr != UNREACHED,
+                          arr - admitted_at[bfs_done][None, :],
+                          UNREACHED).astype(np.int32)[art.perm]
+            cols = {i: lv[:, k] for k, i in enumerate(bfs_done)}
+        for i in done:
             q: BfsQuery = lanes[i]
             levels = None
             if q.kind == KIND_BFS:
-                col = cols[:, k]
-                lv = np.where(col != UNREACHED, col - admitted_at[i],
-                              UNREACHED).astype(np.int32)
-                levels = lv[art.perm]
+                levels = cols[i]
             far = int(far64[i])
             cc = None
             if q.kind == KIND_CLOSENESS:
                 cc = float((n - 1) / far) if far > 0 else 0.0
             out[q.rid] = BfsResult(
                 rid=q.rid, graph=q.graph, source=q.source, kind=q.kind,
-                levels=levels, far=far, reach=int(reaches[i]), closeness=cc,
-                admitted_at_level=int(admitted_at[i]),
+                levels=levels, far=far, reach=int(reach_host[i]),
+                closeness=cc, admitted_at_level=int(admitted_at[i]),
             )

@@ -141,6 +141,7 @@ def test_auto_probes_once_and_caches_verdict(trio):
     art = eng.cache.peek("g")
     assert art.switching is not None  # probe ran at artifact build
     assert isinstance(art.switching.enabled, bool)
+    assert art.switching.proxy == "serve"  # engine probes its own runner
     assert art.reorder.algorithm in ("jaccard", "rcm")
     misses = eng.cache.misses
     eng.submit("g", 1)

@@ -10,10 +10,12 @@ Fails (exit 1) unless:
   * every ``DESIGN.md §N`` citation in the source tree points at a section
     heading that actually exists in DESIGN.md;
   * DESIGN.md section numbers have not drifted: no duplicates, top-level
-    sections in increasing order, and every subsection nested under its
-    parent (§X.Y between §X and the next top-level heading) — DESIGN.md's
-    numbers are stable (code cites them), so drift means a renumber or a
-    misplaced insert that silently invalidates citations.
+    sections *contiguous* (each exactly one more than the last — a gap
+    means an appended section skipped a number or a removal left dangling
+    citations), and every subsection nested under its parent (§X.Y between
+    §X and the next top-level heading) — DESIGN.md's numbers are stable
+    (code cites them), so drift means a renumber or a misplaced insert
+    that silently invalidates citations.
 """
 from __future__ import annotations
 
@@ -91,6 +93,11 @@ def check_design_numbering(errors: list[str]) -> None:
                 errors.append(
                     f"DESIGN.md top-level §{top} appears after §{last_top} "
                     f"(sections must stay in increasing order)")
+            elif top != last_top + 1:
+                errors.append(
+                    f"DESIGN.md top-level §{top} follows §{last_top} "
+                    f"(sections must be contiguous — did an insert or "
+                    f"removal skip a number?)")
             last_top = top
             current_top = parts[0]
         else:
