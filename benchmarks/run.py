@@ -26,6 +26,7 @@ TABLES = [
     "serve_throughput",
     "serve_switching",
     "serve_fused",
+    "serve_fairness",
 ]
 
 

@@ -1,18 +1,25 @@
-"""BFS-as-a-service demo: the batched query engine over two graphs.
+"""BFS-as-a-service demo: the ticket-based query engine over two graphs.
 
     PYTHONPATH=src python examples/bfs_service.py
 
-Registers a scale-free and a road-like graph, submits an interleaved mix of
-BFS and closeness queries (more than one lane-batch's worth, so mid-flight
-admission kicks in), drains the engine, and validates every result against
-the CPU oracle.  This is the serving counterpart of examples/quickstart.py:
-instead of one traversal per host call, up to ``kappa`` requests share each
-level of one packed multi-source traversal.
+Registers a scale-free and a road-like graph and serves an interleaved
+mix of all four built-in workloads — ``bfs``, ``closeness``,
+``distance`` (s→t, the lane early-exits when the target's bit lights
+up), and ``reach`` — through the non-blocking service API (DESIGN.md
+§12): ``submit()`` returns a :class:`Ticket` the caller can poll, and
+the demo pumps ``engine.step()`` itself, submitting new requests between
+steps (they join the live session mid-flight) while both graphs' sessions
+advance in round-robin interleave — no cross-graph head-of-line
+blocking.  Every result is validated against the CPU oracle.  This is
+the serving counterpart of examples/quickstart.py: instead of one
+traversal per host call, up to ``kappa`` requests share each level of
+one packed multi-source traversal.
 """
 import numpy as np
 
 from repro.core import ref_bfs
 from repro.data import graphs
+from repro.serve import workloads
 from repro.serve.bfs_engine import BfsEngine
 
 
@@ -21,7 +28,6 @@ def main():
     road = graphs.grid2d(32, 32)
     print(f"social: n={social.n} m={social.m}   road: n={road.n} m={road.m}")
 
-    eng = BfsEngine(kappa=32)
     # Per-level mode switching is already ON here: the default is
     # switching="auto" — probe each graph once at admission and, where the
     # probe says it pays, compact small-frontier levels to the active VSSs
@@ -32,36 +38,60 @@ def main():
     #   eng = BfsEngine(kappa=32, switching="on", eta=10.0)  # Eq. (6) always
     #   eng = BfsEngine(kappa=32, switching="on", eta=0.0)   # force queued
     #   eng = BfsEngine(kappa=32, switching="off")           # force dense
+    eng = BfsEngine(kappa=32)
     eng.register_graph("social", social)
     eng.register_graph("road", road)
 
     rng = np.random.default_rng(0)
-    queries = {}
-    for i in range(96):  # 3 lane-batches worth -> mid-flight admission
+    kinds = ["bfs", "bfs", "bfs", "closeness", "distance", "reach"]
+    tickets = []
+
+    def submit_one(i):
         name, g = ("social", social) if i % 2 else ("road", road)
+        kind = kinds[i % len(kinds)]
         src = int(rng.integers(0, g.n))
-        kind = "closeness" if i % 5 == 0 else "bfs"
-        queries[eng.submit(name, src, kind=kind)] = (name, g, src, kind)
+        tgt = int(rng.integers(0, g.n)) if kind == "distance" else None
+        tickets.append(eng.submit(name, src, kind=kind, target=tgt))
 
-    results = eng.run()
-    print(f"served {len(results)} queries in "
-          f"{eng.stats['levels']} traversal levels across "
-          f"{eng.stats['batches']} batch sessions "
-          f"({eng.stats['admissions_midflight']} admitted mid-flight)")
+    # 2 lane-batches up front, then pump step() ourselves — one scheduling
+    # tick per call, round-robin across the two graphs' live sessions —
+    # submitting the third batch while traversal is in flight (the requests
+    # join their graph's active session mid-flight, §12.1).
+    for i in range(64):
+        submit_one(i)
+    served = 0
+    late = 64
+    while eng.has_work():
+        served += len(eng.step())
+        if late < 96 and eng.in_flight > 0:
+            submit_one(late)
+            late += 1
+    assert served == len(tickets) == 96
 
-    for rid, (name, g, src, kind) in queries.items():
-        want = ref_bfs.bfs_levels(g, src)
-        r = results[rid]
-        if kind == "bfs":
-            assert (r.levels == want).all(), (name, src)
-        else:
-            reached = want[want != ref_bfs.UNREACHED]
-            assert r.far == int(reached.sum()) and r.reach == reached.size
+    s = eng.stats
+    print(f"served {served} queries in {s['ticks']} scheduling ticks / "
+          f"{s['levels']} traversal levels "
+          f"({s['admissions_midflight']} admitted mid-flight; "
+          f"{s['max_live_sessions']} sessions interleaved, "
+          f"{s['session_switches']} switches)")
+
+    for t in tickets:
+        q = t.query
+        g = social if q.graph == "social" else road
+        workloads.verify_result(t.result(wait=False), q,
+                                ref_bfs.bfs_levels(g, q.source),
+                                unreached=ref_bfs.UNREACHED)
     print("all results match the CPU oracle ✓")
 
-    sample = next(r for r in results.values() if r.kind == "closeness")
-    print(f"e.g. closeness({sample.graph}, v={sample.source}) = "
-          f"{sample.closeness:.4f} (reached {sample.reach} vertices)")
+    lat = np.array([t.latency for t in tickets])
+    print(f"latency p50={np.percentile(lat, 50) * 1e3:.1f}ms "
+          f"p99={np.percentile(lat, 99) * 1e3:.1f}ms")
+    sample = next(t for t in tickets if t.query.kind == "distance"
+                  and t.result().distance is not None)
+    print(f"e.g. distance({sample.query.graph}, "
+          f"{sample.query.source} -> {sample.query.target}) = "
+          f"{sample.result().distance} "
+          f"(answered in {sample.latency * 1e3:.1f}ms)")
 
 
 if __name__ == "__main__":

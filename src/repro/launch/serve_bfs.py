@@ -3,14 +3,26 @@
 
     PYTHONPATH=src python -m repro.launch.serve_bfs \
         --families kron,road --scale 10 --requests 128 --kappa 32 \
-        [--closeness-frac 0.25] [--cache-mb 64] [--verify] \
+        [--kinds bfs,closeness,distance,reach] [--closeness-frac 0.25] \
+        [--cache-mb 64] [--verify] [--scheduler {rr,serial}] \
         [--switching {auto,on,off}] [--eta 10.0] [--megatick 64]
 
 Registers one graph per family, submits a randomly interleaved stream of
-BFS and closeness requests, drains the engine, and reports throughput plus
-admission/cache/switching statistics.  ``--verify`` checks every BFS result
-against the CPU oracle (bit-identical levels) — the serving analogue of
-``repro.launch.bfs --verify``.
+requests, drains the engine, and reports throughput, per-request latency
+(p50/p99 from the tickets' submit/complete timestamps, DESIGN.md §12.1),
+per-graph queue wait (``eng.stats``), and admission/cache/switching
+statistics.  ``--verify`` checks every result against the CPU oracle —
+bit-identical levels for ``bfs``, exact far/reach for ``closeness``,
+exact s→t distance for ``distance``, exact counts for ``reach`` — the
+serving analogue of ``repro.launch.bfs --verify``.
+
+``--kinds`` selects the workload mix (DESIGN.md §12.3): the default
+``bfs,closeness`` reproduces the pre-ticket launcher (``bfs`` vs
+``closeness`` split by ``--closeness-frac``); any other comma list draws
+kinds uniformly, with ``distance`` queries aimed at a random target.
+``--scheduler serial`` restores the PR 1 graph-at-a-time drain (§12.2) —
+compare the reported p99 against the default round-robin to see the
+fairness win ``benchmarks/serve_fairness.py`` measures.
 
 ``--switching``/``--eta`` surface the per-level mode policy (DESIGN.md
 §10.4): ``auto`` (default) runs the paper's preprocessing probe per graph
@@ -40,12 +52,21 @@ def main():
     ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--kappa", type=int, default=32,
                     help="concurrent lanes per traversal (multiple of 32)")
+    ap.add_argument("--kinds", default="bfs,closeness",
+                    help="workload kinds in the request mix (registered "
+                         "plugins; the default bfs,closeness split follows "
+                         "--closeness-frac, other lists draw uniformly)")
     ap.add_argument("--closeness-frac", type=float, default=0.25,
-                    help="fraction of requests that are closeness queries")
+                    help="fraction of requests that are closeness queries "
+                         "(default --kinds only)")
     ap.add_argument("--cache-mb", type=float, default=None,
                     help="artifact cache budget in MiB (default: unbounded)")
     ap.add_argument("--layout", default="auto",
                     choices=["auto", "packed", "byteplane"])
+    ap.add_argument("--scheduler", default="rr", choices=["rr", "serial"],
+                    help="cross-graph scheduling (DESIGN.md §12.2): rr "
+                         "interleaves per-graph sessions round-robin, "
+                         "serial drains one graph at a time (PR 1)")
     ap.add_argument("--switching", default="auto",
                     choices=["auto", "on", "off"],
                     help="per-level mode policy: auto = probe per graph, "
@@ -57,7 +78,7 @@ def main():
                     help="fused dense levels per device dispatch "
                          "(DESIGN.md §11); 1 = per-level engine")
     ap.add_argument("--verify", action="store_true",
-                    help="check BFS results against the CPU oracle")
+                    help="check every result against the CPU oracle")
     args = ap.parse_args()
 
     from repro.core import ref_bfs
@@ -83,8 +104,14 @@ def main():
     cache_bytes = (int(args.cache_mb * (1 << 20))
                    if args.cache_mb is not None else None)
     eng = BfsEngine(kappa=args.kappa, cache_bytes=cache_bytes,
-                    layout=args.layout, switching=args.switching,
+                    layout=args.layout, scheduler=args.scheduler,
+                    switching=args.switching,
                     eta=args.eta, megatick=args.megatick)
+
+    kinds = [k.strip() for k in args.kinds.split(",") if k.strip()]
+    bad = [k for k in kinds if k not in eng.workload_kinds]
+    if bad:
+        ap.error(f"unknown kinds {bad}; registered: {eng.workload_kinds}")
 
     fleet = {}
     for fam in args.families.split(","):
@@ -95,31 +122,49 @@ def main():
         print(f"registered {fam}: n={g.n} m={g.m}")
 
     names = list(fleet)
-    submitted = {}
+    tickets = []
     for _ in range(args.requests):
         name = names[int(rng.integers(0, len(names)))]
         g = fleet[name]
         src = int(rng.integers(0, g.n))
-        kind = ("closeness" if rng.random() < args.closeness_frac else "bfs")
-        submitted[eng.submit(name, src, kind=kind)] = (name, src, kind)
+        if kinds == ["bfs", "closeness"]:
+            kind = ("closeness" if rng.random() < args.closeness_frac
+                    else "bfs")
+        else:
+            kind = kinds[int(rng.integers(0, len(kinds)))]
+        target = (int(rng.integers(0, g.n)) if kind == "distance" else None)
+        tickets.append(eng.submit(name, src, kind=kind, target=target))
 
     t0 = time.perf_counter()
     results = eng.run()
     dt = time.perf_counter() - t0
 
-    n_bfs = sum(1 for *_rest, k in submitted.values() if k == "bfs")
-    print(f"served {len(results)} queries ({n_bfs} bfs, "
-          f"{len(results) - n_bfs} closeness) in {dt:.2f}s "
+    by_kind = {k: sum(1 for t in tickets if t.query.kind == k)
+               for k in kinds}
+    mix = " ".join(f"{k}={v}" for k, v in by_kind.items() if v)
+    print(f"served {len(results)} queries ({mix}) in {dt:.2f}s "
           f"({len(results) / dt:.1f} qps)")
+    # per-request latency from the tickets' timestamps (§12.1): submission
+    # to extraction, so it includes queue wait under backlog
+    lat = np.array([t.latency for t in tickets])
+    print(f"latency p50={np.percentile(lat, 50) * 1e3:.1f}ms "
+          f"p99={np.percentile(lat, 99) * 1e3:.1f}ms "
+          f"max={lat.max() * 1e3:.1f}ms (scheduler={args.scheduler})")
     s = eng.stats
-    print(f"batches={s['batches']} levels={s['levels']} "
+    print(f"batches={s['batches']} ticks={s['ticks']} levels={s['levels']} "
           f"(dense={s['levels_dense']} queued={s['levels_queued']}) "
-          f"mid-flight admissions={s['admissions_midflight']}")
+          f"mid-flight admissions={s['admissions_midflight']} "
+          f"live sessions<={s['max_live_sessions']} "
+          f"switches={s['session_switches']}")
     if s["levels"]:
         print(f"megaticks={s['megaticks']} host_syncs={s['host_syncs']} "
               f"({s['host_syncs'] / s['levels']:.2f}/level at "
               f"megatick={args.megatick})")
     for name in fleet:
+        wait = s.get(f"queue_wait_s:{name}", 0.0)
+        served = sum(1 for t in tickets if t.query.graph == name)
+        print(f"  {name}: {served} requests, total queue wait {wait:.3f}s"
+              + (f" ({wait / served * 1e3:.1f}ms/request)" if served else ""))
         art = eng.cache.peek(name)
         if art is None:
             continue
@@ -130,22 +175,20 @@ def main():
                    f"{'enabled' if sw.enabled else 'disabled'} "
                    f"(with={sw.time_with * 1e3:.1f}ms "
                    f"without={sw.time_without * 1e3:.1f}ms)")
-        print(f"  {name}: reorder={art.reorder.algorithm} "
+        print(f"    reorder={art.reorder.algorithm} "
               f"scale_free={art.reorder.scale_free} switching: {verdict}")
     c = eng.cache
     print(f"cache: {len(c)} resident ({c.current_bytes / (1 << 20):.2f} MiB) "
           f"hits={c.hits} misses={c.misses} evictions={c.evictions}")
 
     if args.verify:
-        for rid, (name, src, kind) in submitted.items():
-            want = ref_bfs.bfs_levels(fleet[name], src)
-            if kind == "bfs":
-                assert (results[rid].levels == want).all(), (name, src)
-            else:
-                reached = want[want != ref_bfs.UNREACHED]
-                r = results[rid]
-                assert r.far == int(reached.sum()), (name, src)
-                assert r.reach == reached.size, (name, src)
+        from repro.serve.workloads import verify_result
+
+        for t in tickets:
+            q = t.query
+            verify_result(results[int(t)], q,
+                          ref_bfs.bfs_levels(fleet[q.graph], q.source),
+                          unreached=ref_bfs.UNREACHED)
         print("verified against CPU oracle ✓")
 
 

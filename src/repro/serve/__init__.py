@@ -1,6 +1,14 @@
-"""Serving engines: ``bfs_engine`` batches independent BFS/closeness
-queries into shared packed multi-source traversals with per-level
-dense/queued mode switching gated by a cached per-graph probe and an
-on-device megatick level loop once a graph's queue drains (DESIGN.md §6,
-§10, §11); ``serve_loop`` is the LM decode continuous-batching engine the
-graph engine's slot-refill design mirrors."""
+"""Serving engines: ``bfs_engine`` batches independent traversal queries
+into shared packed multi-source traversals with per-level dense/queued
+mode switching gated by a cached per-graph probe and an on-device
+megatick level loop once a graph's queue drains (DESIGN.md §6, §10,
+§11).  Its service surface (§12) is ticket-based and non-blocking:
+``submit()`` returns an int-compatible :class:`~repro.serve.bfs_engine.Ticket`
+with completion timestamps, ``step()`` advances one scheduling tick of a
+round-robin scheduler over resumable per-graph sessions (many graphs in
+flight at once — no cross-graph head-of-line blocking), and what a lane
+computes is a :class:`~repro.serve.workloads.Workload` plugin
+(``workloads`` module: ``bfs``/``closeness``/``distance``/``reach``
+built in, ``register`` for more).  ``serve_loop`` is the LM decode
+continuous-batching engine the graph engine's slot-refill design
+mirrors."""

@@ -78,6 +78,32 @@ per-level new-vertex counts the level step already returns — the device
 int32 would overflow on paper-scale graphs (cf. core/closeness.py), and a
 device reach column would only mirror what the host tracks anyway.
 
+Service API (DESIGN.md §12)
+---------------------------
+``submit()`` returns a :class:`Ticket` — an ``int`` (the request id, so
+every pre-ticket call site keeps working) that doubles as a completion
+handle: ``done()``, ``result()``, and submit/admit/complete timestamps
+for latency accounting.  ``engine.step()`` advances **one scheduling
+tick** and returns the newly completed tickets; submission is legal
+between steps, so a caller can pump the engine inside its own event loop
+(true online serving).  ``run()`` is now a thin drain loop over
+``step()`` with unchanged results.
+
+Per graph, the serving state that used to live in a monolithic drain
+loop is a resumable :class:`_GraphSession` (lane set, runner, megatick
+window state held across ticks), so multiple graphs are in flight
+simultaneously; a round-robin scheduler (optionally weighted, see
+``BfsEngine(scheduler=, weights=)``) interleaves their ticks,
+eliminating the cross-graph head-of-line blocking of the PR 1 engine —
+a backlog on one graph no longer starves a single query on another
+(``benchmarks/serve_fairness.py`` measures exactly this).
+
+What a lane computes is a :class:`repro.serve.workloads.Workload`
+plugin (§12.3): ``bfs`` and ``closeness`` are plugins now, joined by
+``distance`` (s→t point-to-point, the lane early-exits the tick its
+target's bit lights up) and ``reach`` (count only, no level-array
+transfer); ``BfsEngine.register_workload`` adds more.
+
 Megatick traversal (DESIGN.md §11)
 ----------------------------------
 ``BfsEngine(megatick=T)`` with ``T > 1`` moves the per-graph level loop
@@ -102,6 +128,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import time
 from collections import OrderedDict, deque
 from typing import NamedTuple
 
@@ -122,39 +149,96 @@ from repro.kernels.pull_ms_packed_queued import (
 from repro.kernels.pull_scatter_ms_packed import (
     pull_scatter_ms_packed, pull_scatter_ms_packed_ref)
 from repro.kernels.scatter_or import scatter_or, scatter_or_ref
+from repro.serve import workloads as workloads_mod
+from repro.serve.workloads import (  # re-exported: the request/result
+    KIND_BFS, KIND_CLOSENESS, KIND_DISTANCE, KIND_REACH,  # noqa: F401
+    BfsQuery, BfsResult, Workload)
 
 SWITCHING_MODES = ("auto", "on", "off")
-
-KIND_BFS = "bfs"
-KIND_CLOSENESS = "closeness"
+SCHEDULERS = ("rr", "serial")
 
 
 # ---------------------------------------------------------------------------
-# Requests / results
+# Tickets (requests/results live in serve/workloads.py, re-exported above)
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass(frozen=True)
-class BfsQuery:
-    """One admitted request: a single-source traversal on a named graph."""
+class Ticket(int):
+    """``submit``'s return value: the request id as an ``int`` subclass —
+    every pre-ticket call site (``results[rid]`` indexing, set/dict keys)
+    keeps working — that doubles as a non-blocking completion handle
+    (DESIGN.md §12.1).
 
-    rid: int
-    graph: str
-    source: int              # original (pre-reordering) vertex id
-    kind: str = KIND_BFS     # 'bfs' | 'closeness'
+    ``done()`` is an O(1) host check; ``result()`` returns the
+    :class:`BfsResult` (by default pumping ``engine.step()`` until this
+    request completes — ``wait=False`` raises instead of pumping).
+    Timestamps (``time.monotonic()`` seconds) support latency accounting:
+    ``submitted_at`` is stamped at submission, ``admitted_at`` when the
+    request is seeded into a lane (``queue_wait`` = admitted − submitted),
+    ``completed_at`` at extraction (``latency`` = completed − submitted).
 
+    The engine holds the ticket only while the request is pending; once
+    completed, the result lives on the ticket alone, so result lifetime is
+    the caller's — dropping the ticket drops the result (no unbounded
+    retention in a long-running service; cf. ``keep_results``)."""
 
-@dataclasses.dataclass
-class BfsResult:
-    rid: int
-    graph: str
-    source: int
-    kind: str
-    levels: np.ndarray | None   # (n,) int32 in original ids (bfs only)
-    far: int                    # sum of distances to reached vertices
-    reach: int                  # reached vertex count (incl. the source)
-    closeness: float | None     # (n-1)/far, 0.0 if nothing reached
-    admitted_at_level: int      # global level counter at admission (0 = cold)
+    _engine: "BfsEngine"
+    query: BfsQuery
+    submitted_at: float
+    admitted_at: float | None
+    completed_at: float | None
+    _result: BfsResult | None
+
+    def __new__(cls, rid: int, engine: "BfsEngine", query: BfsQuery):
+        t = super().__new__(cls, rid)
+        t._engine = engine
+        t.query = query
+        t.submitted_at = time.monotonic()
+        t.admitted_at = None
+        t.completed_at = None
+        t._result = None
+        return t
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self, *, wait: bool = True) -> BfsResult:
+        """The finished :class:`BfsResult`.  ``wait=True`` (default) pumps
+        ``engine.step()`` until this request completes; ``wait=False``
+        raises RuntimeError when it has not completed yet.
+
+        Other requests completing during the pump are re-queued onto the
+        engine's completion stream (only this ticket's own notification
+        is consumed), so a surrounding ``step()``/``run()`` loop still
+        sees every completion exactly once."""
+        if self._result is None and wait:
+            eng = self._engine
+            # foreign completions are parked locally during the pump (a
+            # step()-returned ticket fed straight back into eng._completed
+            # would be drained and re-parked on every remaining iteration)
+            # and re-queued in one batch when the pump ends
+            others: list[Ticket] = []
+            while self._result is None and eng.has_work():
+                others.extend(t for t in eng.step() if t is not self)
+            eng._completed.extend(others)
+        if self._result is None:
+            raise RuntimeError(f"request {int(self)} has not completed"
+                               + ("" if wait else " (wait=False)"))
+        return self._result
+
+    @property
+    def queue_wait(self) -> float | None:
+        """Seconds from submission to lane admission (None while queued)."""
+        if self.admitted_at is None:
+            return None
+        return self.admitted_at - self.submitted_at
+
+    @property
+    def latency(self) -> float | None:
+        """Seconds from submission to completion (None until done)."""
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
 
 
 # ---------------------------------------------------------------------------
@@ -340,8 +424,8 @@ class LaneState(NamedTuple):
     """Device arrays for kappa in-flight lanes (both layouts share this
     shape-polymorphic container; packed uses uint32 words, byteplane uint8
     columns).  Per-lane reach is *not* here: it is mirrored host-side from
-    the per-level new counts (`reach_host` in ``BfsEngine._drain_graph``)
-    and a device column would only be read back at extraction."""
+    the per-level new counts (`reach_host` in ``_GraphSession``) and a
+    device column would only be read back at extraction."""
 
     v: jax.Array        # (n_ext, kw) uint32 | (n_ext, kappa) uint8 visited
     f: jax.Array        # (num_sets_ext, sigma, width) frontier tiles
@@ -424,6 +508,10 @@ class _LaneRunner:
         # len(done), so at most log2(kappa)+1 shapes ever compile
         self._gather_cols_fn = jax.jit(
             lambda levels, idx: levels[: bd.n][:, idx])
+        # watched-target gather (§12.3): one level stamp per lane — a
+        # (kappa,) transfer per tick while any distance lane is in flight
+        self._watch_fn = jax.jit(
+            lambda levels, ids: levels[ids, jnp.arange(kappa)])
 
     # ---- state ------------------------------------------------------------
     def init_state(self) -> LaneState:
@@ -680,6 +768,16 @@ class _LaneRunner:
             (state, reach, jnp.int32(0), done0, hist0))
         return state, hist
 
+    # ---- watched-target gather (§12.3) ------------------------------------
+    def watch_levels(self, levels, ids_dev) -> np.ndarray:
+        """Level stamps of one watched vertex per lane: (kappa,) int32 in
+        a single tiny gather.  ``ids_dev`` is the host-clamped (>= 0)
+        per-lane vertex id column; the caller masks unwatched lanes.
+        Copied out of the device buffer: the session mutates its ``tl``
+        mirror at admission, and ``np.asarray`` of a jax array is
+        read-only."""
+        return np.array(self._watch_fn(levels, ids_dev))
+
     # ---- extraction gather (§11.3) ----------------------------------------
     def gather_level_cols(self, levels, cols: list[int]) -> np.ndarray:
         """Finished lanes' level columns, sliced on device before the host
@@ -737,27 +835,354 @@ class _LaneRunner:
 
 
 # ---------------------------------------------------------------------------
-# The engine: admission queue + per-graph batch sessions
+# Graph sessions: one resumable serving context per in-flight graph
+# ---------------------------------------------------------------------------
+
+
+# the BfsResult fields a Workload.extract override may set
+_RESULT_FIELDS = frozenset(BfsResult.__dataclass_fields__)
+
+
+class _GraphSession:
+    """Resumable per-graph serving state (DESIGN.md §12.2).
+
+    PR 1's engine drained one graph to completion inside a monolithic
+    ``_drain_graph`` loop; everything that loop kept in locals — the lane
+    set, the host mirrors (far/reach), the megatick window caches — now
+    lives here, so a session advances **one tick at a time** and the
+    scheduler can interleave many graphs.  One tick is one iteration of
+    the old loop: admission refill, then either one megatick window or
+    one (dense | queued) level, then per-lane early exit.
+
+    The session pins ``art``/``runner`` for its lifetime, so a graph
+    evicted from the cache mid-service keeps serving correctly: the cache
+    drops the entry (and a *re-opened* session will rebuild it) but
+    in-flight lanes never see the substrate swap out from under them.
+    """
+
+    def __init__(self, engine: "BfsEngine", name: str, queue: deque):
+        self.engine = engine
+        self.name = name
+        self.queue = queue
+        art = engine.cache.get(name)
+        self.art = art
+        self.runner = engine._runner_for(name, art.bd)
+        kappa = engine.kappa
+        self.lanes: list[BfsQuery | None] = [None] * kappa
+        self.wl: list[Workload | None] = [None] * kappa
+        self.accs: list[workloads_mod.LaneAccum | None] = [None] * kappa
+        self.admitted_at = np.zeros(kappa, np.int32)
+        # Eq.(7) far accumulated host-side in int64: the device int32 lane
+        # accumulator would overflow on paper-scale graphs (sum of
+        # distances from one source can exceed 2^31; cf. core/closeness.py,
+        # which widens to int64 on host for the same reason).
+        self.far64 = np.zeros(kappa, np.int64)
+        # per-lane visited counts mirrored host-side: the Eq. (6) unvisited
+        # term aggregated over in-flight lanes, without a device round-trip
+        self.reach_host = np.zeros(kappa, np.int64)
+        # watched-target machinery (§12.3): permuted target id per lane
+        # (-1 = not watching), the cached clamped device column, and the
+        # stamps from the latest watch gather
+        self.watch_ids = np.full(kappa, -1, np.int64)
+        self.watch_dev = None
+        self.tl = np.full(kappa, UNREACHED, np.int64)
+        self.policy_on = engine._policy_active(art)
+        self.state = self.runner.init_state()
+        self.ell = 0
+        # device copies of the lane metadata the megatick window reads;
+        # rebuilt only when the lane set changes (admission / extraction)
+        self.meta_dev = None
+        # queued-streak guard: after a window exits on a queued verdict,
+        # stay on the per-level path until the policy picks dense again —
+        # otherwise a queued-dominant traversal would pay a no-op window
+        # dispatch plus a history transfer on every single level
+        self.prefer_host = False
+        engine.stats["batches"] += 1
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(q is None for q in self.lanes)
+
+    @property
+    def in_flight(self) -> int:
+        return sum(q is not None for q in self.lanes)
+
+    # ---- one scheduling tick ----------------------------------------------
+    def tick(self) -> None:
+        eng = self.engine
+        runner, art, kappa = self.runner, self.art, eng.kappa
+        queue, lanes = self.queue, self.lanes
+        # ---- admission: refill free lanes from the queue -----------------
+        free = [i for i in range(kappa) if lanes[i] is None]
+        if free and queue:
+            self.meta_dev = None
+            self.watch_dev = None
+            clear = np.zeros(kappa, bool)
+            new_src = np.full(kappa, -1, np.int32)
+            now = time.monotonic()
+            for i in free:
+                if not queue:
+                    break
+                q = queue.popleft()
+                wl = eng._workloads[q.kind]
+                lanes[i] = q
+                self.wl[i] = wl
+                self.accs[i] = (workloads_mod.LaneAccum()
+                                if wl.has_accumulate else None)
+                self.admitted_at[i] = self.ell
+                self.far64[i] = 0
+                self.reach_host[i] = 1  # the seeded source is visited
+                self.watch_ids[i] = (art.perm[q.target]
+                                     if wl.watches_target else -1)
+                self.tl[i] = UNREACHED
+                clear[i] = True
+                new_src[i] = art.perm[q.source]
+                eng._lane_admitted(q, now)
+                if self.ell > 0:
+                    eng.stats["admissions_midflight"] += 1
+            self.state = runner.reseed(self.state, clear, new_src, self.ell)
+        if all(q is None for q in lanes):
+            return
+        active_arr = np.fromiter((q is not None for q in lanes), bool, kappa)
+        # ---- megatick window: up to T fused dense levels (§11.1) ---------
+        # windows run when this graph's queue is drained; under backlog
+        # the per-level path keeps admission immediate (a window exiting
+        # on every lane-finish to admit degenerates to per-level ticks
+        # that still pay the window overhead)
+        if eng.megatick > 1 and not queue and not self.prefer_host:
+            if self.meta_dev is None:
+                self.meta_dev = (jnp.asarray(active_arr),
+                                 jnp.asarray(self.admitted_at, jnp.int32))
+            self.state, hist = runner.megatick(
+                self.state, self.reach_host.astype(np.int32), self.ell,
+                self.meta_dev[0], self.meta_dev[1], eng.eta,
+                ticks=eng.megatick, policy_on=self.policy_on)
+            hist = np.asarray(hist)
+            eng.stats["host_syncs"] += 1
+            # unexecuted rows stay -1: the one transfer above carries
+            # both the executed tick count and every level's counts
+            ticks = int((hist[:, 0] >= 0).sum())
+            if ticks:
+                eng.stats["megaticks"] += 1
+                eng.stats["levels"] += ticks
+                eng.stats["levels_dense"] += ticks
+                w = hist[:ticks].astype(np.int64)
+                ells = self.ell + 1 + np.arange(ticks, dtype=np.int64)
+                self.reach_host += w.sum(axis=0)
+                self.far64 += ((ells[:, None] - self.admitted_at[None, :])
+                               * w).sum(axis=0)
+                self.ell += ticks
+                self._run_hooks(w, ells)
+                tl = self._watch_tick()
+                # lane new counts are monotone-absorbing at zero, so the
+                # last row flags every lane that finished anywhere in the
+                # window
+                if self._finish_tick(hist[ticks - 1], tl):
+                    self.meta_dev = None
+                    return  # freed lanes: admit before the next window
+                if ticks == eng.megatick:
+                    return  # window exhausted with every lane active
+            # the window stopped short of T with no lane finished: the
+            # on-device Eq. (6) verdict was queued — run that one level
+            # host-side with the §10 bucketed machinery, and stay on
+            # the per-level path while the verdict keeps being queued
+            mode = "queued"
+            self.prefer_host = True
+            active_mask = runner.active_set_mask(self.state.f)
+            eng.stats["host_syncs"] += 1
+        else:
+            # ---- mode decision over the aggregate frontier (§10.2) -------
+            # counts first, ids later: the decision needs only |Q|; the
+            # id list is expanded on the queued branch alone, so dense
+            # levels under a policy skip the O(|Q|) host expansion
+            mode = "dense"
+            active_mask = None
+            if self.policy_on:
+                active_mask = runner.active_set_mask(self.state.f)
+                eng.stats["host_syncs"] += 1
+                q_len = runner.queue_len(active_mask)
+                unvisited = int(np.where(active_arr,
+                                         art.graph.n - self.reach_host,
+                                         0).sum())
+                mode = switching_mod.decide_mode(unvisited, q_len, eng.eta)
+                # bucket guard: a padded queue as large as the full VSS
+                # sweep can only lose to dense (gather overhead, no
+                # savings)
+                if bucket_size(q_len) >= art.bd.num_vss_pad:
+                    mode = "dense"
+            if mode == "dense":
+                self.prefer_host = False  # dense again: windows may resume
+        # ---- one level for every lane ------------------------------------
+        self.ell += 1
+        if mode == "queued":
+            qids = runner.active_vss(active_mask)
+            self.state, new_lane = runner.level_queued(
+                self.state, self.ell, runner.bucket_qids(qids))
+            eng.stats["levels_queued"] += 1
+        else:
+            self.state, new_lane = runner.level(self.state, self.ell)
+            eng.stats["levels_dense"] += 1
+        eng.stats["levels"] += 1
+        nl = np.asarray(new_lane)
+        eng.stats["host_syncs"] += 1
+        self.reach_host += nl
+        self.far64 += (self.ell - self.admitted_at).astype(np.int64) * nl
+        self._run_hooks(nl[None, :].astype(np.int64),
+                        np.array([self.ell], dtype=np.int64))
+        tl = self._watch_tick()
+        if self._finish_tick(nl, tl):
+            self.meta_dev = None
+
+    # ---- per-level workload hooks (§12.3) ---------------------------------
+    def _run_hooks(self, counts: np.ndarray, ells: np.ndarray) -> None:
+        """Call overridden ``Workload.accumulate`` hooks for the executed
+        levels: ``counts`` is (T, kappa) new-vertex counts at global
+        levels ``ells``.  Lanes of hook-less workloads (all built-ins)
+        never enter the loop, so the hot path stays vectorized."""
+        if not any(a is not None for a in self.accs):
+            return
+        for i in range(self.engine.kappa):
+            acc = self.accs[i]
+            if acc is None or self.lanes[i] is None:
+                continue
+            wl, a0 = self.wl[i], int(self.admitted_at[i])
+            for t in range(counts.shape[0]):
+                wl.accumulate(acc, int(ells[t]) - a0, int(counts[t, i]))
+
+    # ---- watched targets (§12.3) ------------------------------------------
+    def _watch_tick(self) -> np.ndarray | None:
+        """Watched targets' level stamps after a level/window: one tiny
+        (kappa,) gather, skipped entirely unless a watcher lane is in
+        flight — bfs/closeness/reach streams never pay it."""
+        if not ((self.watch_ids >= 0)
+                & np.fromiter((q is not None for q in self.lanes), bool,
+                              self.engine.kappa)).any():
+            return None
+        if self.watch_dev is None:
+            self.watch_dev = jnp.asarray(
+                np.maximum(self.watch_ids, 0).astype(np.int32))
+        self.tl = self.runner.watch_levels(self.state.levels, self.watch_dev)
+        self.engine.stats["host_syncs"] += 1
+        return self.tl
+
+    # ---- per-lane early exit ----------------------------------------------
+    def _finish_tick(self, nl: np.ndarray, tl: np.ndarray | None) -> bool:
+        """Extract and free every finished lane after a level (or megatick
+        window): frontier empty, diameter bound hit, or — distance lanes —
+        the watched target's bit lit (§12.3); True iff any lane freed."""
+        eng, art = self.engine, self.art
+        done = [i for i in range(eng.kappa) if self.lanes[i] is not None
+                and (nl[i] == 0
+                     or self.ell - self.admitted_at[i] >= art.bd.n_ext
+                     or (tl is not None and self.watch_ids[i] >= 0
+                         and tl[i] != UNREACHED))]
+        if not done:
+            return False
+        self._extract(done)
+        for i in done:
+            self.lanes[i] = None
+            self.wl[i] = None
+            self.accs[i] = None
+            self.watch_ids[i] = -1
+        self.watch_dev = None
+        # a lane freed with a non-empty frontier (watched-target early
+        # exit; in principle the diameter bound too) would keep
+        # traversing in its column and feed the dead frontier into the
+        # Eq. (6) aggregate / queued expansions until re-seeded — wipe it
+        # now (reseed with src=-1 clears without seeding); the common
+        # frontier-empty exit (nl == 0) skips the extra dispatch
+        live = [i for i in done if nl[i] != 0]
+        if live:
+            clear = np.zeros(eng.kappa, bool)
+            clear[live] = True
+            self.state = self.runner.reseed(
+                self.state, clear, np.full(eng.kappa, -1, np.int32),
+                self.ell)
+        return True
+
+    def _extract(self, done: list[int]) -> None:
+        eng, art = self.engine, self.art
+        n = art.graph.n
+        # the done columns are sliced on device (bucketed static-shape
+        # gather, §11.3) so the host copy is (n, |done|), not the full
+        # (n_ext, kappa) levels array — and only for workloads that ship
+        # level arrays at all (needs_levels): a closeness/distance/reach
+        # batch transfers nothing here
+        lv_done = [i for i in done if self.wl[i].needs_levels]
+        cols = {}
+        if lv_done:
+            arr = self.runner.gather_level_cols(self.state.levels, lv_done)
+            eng.stats["host_syncs"] += 1
+            # one vectorized admission-offset subtraction + permutation for
+            # every finished column (a per-lane loop here was measurable)
+            lv = np.where(arr != UNREACHED,
+                          arr - self.admitted_at[lv_done][None, :],
+                          UNREACHED).astype(np.int32)[art.perm]
+            cols = {i: lv[:, k] for k, i in enumerate(lv_done)}
+        for i in done:
+            q: BfsQuery = self.lanes[i]
+            wl: Workload = self.wl[i]
+            target_level = None
+            if (wl.watches_target and self.watch_ids[i] >= 0
+                    and self.tl[i] != UNREACHED):
+                target_level = int(self.tl[i] - self.admitted_at[i])
+            view = workloads_mod.LaneView(
+                query=q, n=n, admitted_at_level=int(self.admitted_at[i]),
+                far=int(self.far64[i]), reach=int(self.reach_host[i]),
+                levels=cols.get(i), target_level=target_level,
+                acc=self.accs[i])
+            res = BfsResult(
+                rid=q.rid, graph=q.graph, source=q.source, kind=q.kind,
+                levels=None, far=view.far, reach=view.reach, closeness=None,
+                admitted_at_level=view.admitted_at_level)
+            for field, value in (wl.extract(view) or {}).items():
+                if field not in _RESULT_FIELDS:
+                    raise ValueError(
+                        f"workload {wl.kind!r} extract() returned unknown "
+                        f"BfsResult field {field!r}")
+                setattr(res, field, value)
+            eng._lane_completed(q, res)
+
+
+# ---------------------------------------------------------------------------
+# The engine: admission queue + fair scheduler over per-graph sessions
 # ---------------------------------------------------------------------------
 
 
 class BfsEngine:
-    """Continuous-batching BFS/closeness query engine.
+    """Continuous-batching graph-query engine with a ticket-based
+    non-blocking service API (DESIGN.md §6, §12).
 
     Usage::
 
         eng = BfsEngine(kappa=32, cache_bytes=64 << 20)
         eng.register_graph("social", g1)
         eng.register_graph("road", g2)
-        r1 = eng.submit("social", source=17)                 # BFS levels
-        r2 = eng.submit("road", source=3, kind="closeness")  # closeness
-        results = eng.run()     # {rid: BfsResult}
+        t1 = eng.submit("social", source=17)                 # BFS levels
+        t2 = eng.submit("road", source=3, kind="closeness")
+        results = eng.run()     # {rid: BfsResult}; tickets are ints
 
-    ``run`` drains the queue graph by graph (FIFO on the oldest pending
-    request).  Within one graph it opens a *batch session*: seed up to
-    ``kappa`` sources, advance all lanes one level per tick, extract and
-    re-seed finished lanes each tick until both the lane set and the
-    graph's queue are empty.
+        # ... or pump incrementally (§12.1) — submission is legal between
+        # steps, and lands in the graph's live session mid-flight:
+        t3 = eng.submit("road", 9, kind="distance", target=41)
+        while not t3.done():
+            for t in eng.step():          # one scheduling tick
+                print(int(t), t.latency, t.result())
+
+    Scheduling policy (§12.2): each ``step()`` opens a session for every
+    graph with queued work and gives **one tick** — one traversal level,
+    or one megatick window — to the next session in round-robin order
+    (``weights={name: k}`` grants a graph ``k`` consecutive ticks per
+    rotation).  Requests on one graph are FIFO; across graphs the
+    round-robin interleaves sessions, so a deep backlog on one graph
+    cannot head-of-line-block another's single query.
+    ``scheduler="serial"`` restores the PR 1 graph-at-a-time drain (the
+    ``benchmarks/serve_fairness.py`` baseline).  ``run()`` is a thin
+    drain loop over ``step()`` with unchanged results.
+
+    What a lane computes is a :class:`repro.serve.workloads.Workload`
+    plugin (§12.3): ``bfs``/``closeness``/``distance``/``reach`` by
+    default, ``register_workload`` for more.
     """
 
     def __init__(self, *, kappa: int = 32, cache_bytes: int | None = None,
@@ -766,7 +1191,10 @@ class BfsEngine:
                  reorder: str | None = None, keep_results: bool = False,
                  switching: str = "auto",
                  eta: float = switching_mod.ETA_DEFAULT,
-                 megatick: int = 1):
+                 megatick: int = 1,
+                 scheduler: str = "rr",
+                 weights: dict[str, int] | None = None,
+                 workloads: dict[str, Workload] | None = None):
         if kappa % 32 != 0 or kappa <= 0:
             raise ValueError("kappa must be a positive multiple of 32")
         if switching not in SWITCHING_MODES:
@@ -776,6 +1204,11 @@ class BfsEngine:
             raise ValueError(f"eta must be >= 0, got {eta}")
         if megatick < 1:
             raise ValueError(f"megatick must be >= 1, got {megatick}")
+        if scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"scheduler must be one of {SCHEDULERS}, got {scheduler!r}")
+        if weights and any(int(w) < 1 for w in weights.values()):
+            raise ValueError(f"weights must be >= 1, got {weights}")
         self.kappa = kappa
         self.layout = layout
         self.use_pallas = use_pallas
@@ -783,6 +1216,13 @@ class BfsEngine:
         self.switching = switching
         self.eta = float(eta)
         self.megatick = int(megatick)
+        self.scheduler = scheduler
+        self.weights = ({k: int(v) for k, v in weights.items()}
+                        if weights else None)
+        # per-engine snapshot of the workload registry: register_workload
+        # extends this engine alone, workloads.register the module default
+        self._workloads = (dict(workloads) if workloads is not None
+                           else workloads_mod.default_registry())
         # probe timings in Pallas interpret mode are meaningless (see
         # benchmarks/common.py), so the probe only uses Pallas on real TPUs
         self._probe_pallas = (jax.default_backend() == "tpu"
@@ -798,6 +1238,17 @@ class BfsEngine:
         self._runners: dict[str, _LaneRunner] = {}
         self._queues: OrderedDict[str, deque[BfsQuery]] = OrderedDict()
         self._rids = itertools.count()
+        # scheduler state (§12.2): live sessions, their round-robin
+        # rotation, and the tick quantum left for the rotation head
+        self._sessions: dict[str, _GraphSession] = {}
+        self._rotation: deque[str] = deque()
+        self._quantum_left = 0
+        self._last_scheduled: str | None = None
+        # pending tickets (popped at completion — result lifetime is the
+        # caller's ticket, not the engine) and the tickets completed since
+        # the last step() returned
+        self._tickets: dict[int, Ticket] = {}
+        self._completed: list[Ticket] = []
         # opt-in: retaining every result (full level arrays) would be an
         # unbounded memory leak in a long-running service
         self.keep_results = keep_results
@@ -807,6 +1258,7 @@ class BfsEngine:
             "admissions_midflight": 0,
             "levels_dense": 0, "levels_queued": 0,
             "megaticks": 0, "host_syncs": 0,
+            "ticks": 0, "session_switches": 0, "max_live_sessions": 0,
         }
 
     # ---- registration / admission -----------------------------------------
@@ -814,42 +1266,172 @@ class BfsEngine:
                        reorder: str | None = None) -> None:
         self.cache.register(name, graph,
                             reorder=reorder or self.default_reorder)
+        # per-graph queue-wait accounting (seconds spent submitted but not
+        # yet seeded into a lane), keyed into stats so launchers/benchmarks
+        # report it without extra plumbing
+        self.stats[f"queue_wait_s:{name}"] = 0.0
 
-    def submit(self, graph: str, source: int, kind: str = KIND_BFS) -> int:
+    def register_workload(self, workload: Workload) -> None:
+        """Register a workload plugin on this engine alone (module-wide
+        default for engines built later: ``repro.serve.workloads.register``)."""
+        if not workload.kind:
+            raise ValueError("workload must set a non-empty kind")
+        self._workloads[workload.kind] = workload
+
+    @property
+    def workload_kinds(self) -> list[str]:
+        return sorted(self._workloads)
+
+    def submit(self, graph: str, source: int, kind: str = KIND_BFS,
+               *, target: int | None = None) -> Ticket:
+        """Enqueue one request; returns a :class:`Ticket` (int-compatible
+        request id + completion handle).  Legal at any time — between
+        ``step()`` calls the request joins the graph's live session
+        mid-flight, exactly like PR 1's mid-flight admission."""
         if not self.cache.is_registered(graph):
             raise KeyError(f"graph {graph!r} not registered")
-        if kind not in (KIND_BFS, KIND_CLOSENESS):
-            raise ValueError(f"unknown query kind {kind!r}")
+        wl = self._workloads.get(kind)
+        if wl is None:
+            raise ValueError(f"unknown query kind {kind!r}; registered "
+                             f"workloads: {self.workload_kinds}")
         g = self.cache.graph(graph)
         if not 0 <= source < g.n:
             raise ValueError(f"source {source} out of range for {graph!r}")
         rid = next(self._rids)
-        q = BfsQuery(rid=rid, graph=graph, source=int(source), kind=kind)
+        q = BfsQuery(rid=rid, graph=graph, source=int(source), kind=kind,
+                     target=None if target is None else int(target))
+        wl.validate(q, g)
+        ticket = Ticket(rid, self, q)
+        self._tickets[rid] = ticket
         self._queues.setdefault(graph, deque()).append(q)
         self.stats["queries"] += 1
-        return rid
+        return ticket
 
     @property
     def pending(self) -> int:
+        """Requests submitted but not yet seeded into a lane."""
         return sum(len(q) for q in self._queues.values())
 
+    @property
+    def in_flight(self) -> int:
+        """Requests currently occupying a lane in some live session."""
+        return sum(s.in_flight for s in self._sessions.values())
+
     # ---- serving ----------------------------------------------------------
+    def step(self) -> list[Ticket]:
+        """Advance one scheduling tick (§12.1): open sessions for graphs
+        with queued work, give the next session in rotation one tick (one
+        traversal level or one megatick window), close it if it went
+        idle, and return the tickets completed by this tick — possibly
+        empty, also when nothing is pending at all.  Non-blocking in the
+        service sense: one bounded slice of work per call, so a caller
+        can interleave submission and pumping in its own loop."""
+        self._open_sessions()
+        if self._sessions:
+            name = self._schedule()
+            sess = self._sessions[name]
+            sess.tick()
+            self.stats["ticks"] += 1
+            if (self._last_scheduled not in (None, name)
+                    and len(self._sessions) > 1):
+                self.stats["session_switches"] += 1
+            self._last_scheduled = name
+            if sess.idle:
+                self._close_session(name)
+        done, self._completed = self._completed, []
+        return done
+
     def run(self) -> dict[int, BfsResult]:
         """Drain every pending request; returns {rid: result} for the ones
         completed by this call (also recorded in ``self.results`` when the
-        engine was built with ``keep_results=True``)."""
+        engine was built with ``keep_results=True``).
+
+        Scheduling is the documented §12.2 policy — FIFO within a graph,
+        round-robin across graph sessions — not the graph-serial drain of
+        PR 1 (whose docstring claimed a per-request FIFO it did not
+        implement); ``BfsEngine(scheduler="serial")`` restores the old
+        graph-at-a-time behaviour."""
         out: dict[int, BfsResult] = {}
-        while self._queues:
-            name, queue = next(iter(self._queues.items()))
-            if not queue:
-                self._queues.pop(name)
-                continue
-            self._drain_graph(name, queue, out)
-            self._queues.pop(name, None)
-        if self.keep_results:
-            self.results.update(out)
+        while self.has_work():
+            for t in self.step():
+                out[int(t)] = t._result
         return out
 
+    def has_work(self) -> bool:
+        """True while any request is queued, any session is live, or a
+        completion awaits delivery by the next ``step()`` (a ticket
+        re-queued by another ticket's ``result()`` pump) — the public
+        pump predicate (``while eng.has_work(): eng.step()``)."""
+        return (bool(self._sessions) or bool(self._completed)
+                or any(self._queues.values()))
+
+    # ---- scheduler (§12.2) ------------------------------------------------
+    def _open_sessions(self) -> None:
+        if self.scheduler == "serial":
+            # PR 1 semantics: one graph at a time, in queue-insertion order
+            if self._sessions:
+                return
+            for name, q in self._queues.items():
+                if q:
+                    self._open_session(name)
+                    return
+            return
+        for name in [n for n, q in self._queues.items()
+                     if q and n not in self._sessions]:
+            self._open_session(name)
+
+    def _open_session(self, name: str) -> None:
+        self._sessions[name] = _GraphSession(self, name, self._queues[name])
+        self._rotation.append(name)
+        if len(self._rotation) == 1:
+            self._quantum_left = self._weight(name)
+        self.stats["max_live_sessions"] = max(
+            self.stats["max_live_sessions"], len(self._sessions))
+
+    def _close_session(self, name: str) -> None:
+        sess = self._sessions.pop(name)
+        was_head = self._rotation and self._rotation[0] == name
+        self._rotation.remove(name)
+        if was_head and self._rotation:
+            self._quantum_left = self._weight(self._rotation[0])
+        # drop the graph's (empty) queue object so a later submit starts a
+        # fresh one; guard against it having been replaced meanwhile
+        if not sess.queue and self._queues.get(name) is sess.queue:
+            self._queues.pop(name)
+
+    def _schedule(self) -> str:
+        """Pick this tick's session: serve the rotation head until its
+        quantum (its weight, default 1) is spent, then rotate."""
+        rot = self._rotation
+        name = rot[0]
+        self._quantum_left -= 1
+        if self._quantum_left <= 0:
+            rot.rotate(-1)
+            self._quantum_left = self._weight(rot[0])
+        return name
+
+    def _weight(self, name: str) -> int:
+        return self.weights.get(name, 1) if self.weights else 1
+
+    # ---- ticket bookkeeping -----------------------------------------------
+    def _lane_admitted(self, q: BfsQuery, now: float) -> None:
+        t = self._tickets.get(q.rid)
+        if t is not None:
+            t.admitted_at = now
+            key = f"queue_wait_s:{q.graph}"
+            self.stats[key] = (self.stats.get(key, 0.0)
+                               + (now - t.submitted_at))
+
+    def _lane_completed(self, q: BfsQuery, res: BfsResult) -> None:
+        t = self._tickets.pop(q.rid, None)
+        if t is not None:
+            t._result = res
+            t.completed_at = time.monotonic()
+            self._completed.append(t)
+        if self.keep_results:
+            self.results[q.rid] = res
+
+    # ---- per-graph runners / probe adoption --------------------------------
     def _make_probe_runner(self, bd: BvssDevice) -> _LaneRunner:
         r = _LaneRunner(bd, self.kappa, layout=self.layout,
                         use_pallas=self._probe_pallas)
@@ -896,195 +1478,3 @@ class BfsEngine:
             return True
         sw = art.switching
         return True if sw is None else bool(sw.enabled)
-
-    def _drain_graph(self, name: str, queue: deque,
-                     out: dict[int, BfsResult]) -> None:
-        art = self.cache.get(name)
-        runner = self._runner_for(name, art.bd)
-        self.stats["batches"] += 1
-        kappa = self.kappa
-        n = art.graph.n
-        lanes: list[BfsQuery | None] = [None] * kappa
-        admitted_at = np.zeros(kappa, np.int32)
-        # Eq.(7) far accumulated host-side in int64: the device int32 lane
-        # accumulator would overflow on paper-scale graphs (sum of distances
-        # from one source can exceed 2^31; cf. core/closeness.py, which
-        # widens to int64 on host for the same reason).
-        far64 = np.zeros(kappa, np.int64)
-        # per-lane visited counts mirrored host-side: the Eq. (6) unvisited
-        # term aggregated over in-flight lanes, without a device round-trip
-        reach_host = np.zeros(kappa, np.int64)
-        policy_on = self._policy_active(art)
-        state = runner.init_state()
-        ell = 0
-        # device copies of the lane metadata the megatick window reads;
-        # rebuilt only when the lane set changes (admission / extraction)
-        meta_dev = None
-        # queued-streak guard: after a window exits on a queued verdict,
-        # stay on the per-level path until the policy picks dense again —
-        # otherwise a queued-dominant traversal would pay a no-op window
-        # dispatch plus a history transfer on every single level
-        prefer_host = False
-        while True:
-            # ---- admission: refill free lanes from the queue -------------
-            free = [i for i in range(kappa) if lanes[i] is None]
-            if free and queue:
-                meta_dev = None
-                clear = np.zeros(kappa, bool)
-                new_src = np.full(kappa, -1, np.int32)
-                for i in free:
-                    if not queue:
-                        break
-                    q = queue.popleft()
-                    lanes[i] = q
-                    admitted_at[i] = ell
-                    far64[i] = 0
-                    reach_host[i] = 1  # the seeded source is visited
-                    clear[i] = True
-                    new_src[i] = art.perm[q.source]
-                    if ell > 0:
-                        self.stats["admissions_midflight"] += 1
-                state = runner.reseed(state, clear, new_src, ell)
-            if all(q is None for q in lanes):
-                break
-            active_arr = np.fromiter((q is not None for q in lanes), bool,
-                                     kappa)
-            # ---- megatick window: up to T fused dense levels (§11.1) -----
-            # windows run when this graph's queue is drained; under backlog
-            # the per-level path keeps admission immediate (a window exiting
-            # on every lane-finish to admit degenerates to per-level ticks
-            # that still pay the window overhead)
-            if self.megatick > 1 and not queue and not prefer_host:
-                if meta_dev is None:
-                    meta_dev = (jnp.asarray(active_arr),
-                                jnp.asarray(admitted_at, jnp.int32))
-                state, hist = runner.megatick(
-                    state, reach_host.astype(np.int32), ell, meta_dev[0],
-                    meta_dev[1], self.eta, ticks=self.megatick,
-                    policy_on=policy_on)
-                hist = np.asarray(hist)
-                self.stats["host_syncs"] += 1
-                # unexecuted rows stay -1: the one transfer above carries
-                # both the executed tick count and every level's counts
-                ticks = int((hist[:, 0] >= 0).sum())
-                if ticks:
-                    self.stats["megaticks"] += 1
-                    self.stats["levels"] += ticks
-                    self.stats["levels_dense"] += ticks
-                    w = hist[:ticks].astype(np.int64)
-                    ells = ell + 1 + np.arange(ticks, dtype=np.int64)
-                    reach_host += w.sum(axis=0)
-                    far64 += ((ells[:, None] - admitted_at[None, :])
-                              * w).sum(axis=0)
-                    ell += ticks
-                    # lane new counts are monotone-absorbing at zero, so
-                    # the last row flags every lane that finished anywhere
-                    # in the window
-                    if self._finish_tick(art, runner, state, lanes, hist[
-                            ticks - 1], admitted_at, far64, reach_host, ell,
-                            out):
-                        meta_dev = None
-                        continue  # freed lanes: admit before the next window
-                    if ticks == self.megatick:
-                        continue  # window exhausted with every lane active
-                # the window stopped short of T with no lane finished: the
-                # on-device Eq. (6) verdict was queued — run that one level
-                # host-side with the §10 bucketed machinery, and stay on
-                # the per-level path while the verdict keeps being queued
-                mode = "queued"
-                prefer_host = True
-                active_mask = runner.active_set_mask(state.f)
-                self.stats["host_syncs"] += 1
-            else:
-                # ---- mode decision over the aggregate frontier (§10.2) ---
-                # counts first, ids later: the decision needs only |Q|; the
-                # id list is expanded on the queued branch alone, so dense
-                # levels under a policy skip the O(|Q|) host expansion
-                mode = "dense"
-                active_mask = None
-                if policy_on:
-                    active_mask = runner.active_set_mask(state.f)
-                    self.stats["host_syncs"] += 1
-                    q_len = runner.queue_len(active_mask)
-                    unvisited = int(np.where(active_arr, n - reach_host,
-                                             0).sum())
-                    mode = switching_mod.decide_mode(unvisited, q_len,
-                                                     self.eta)
-                    # bucket guard: a padded queue as large as the full VSS
-                    # sweep can only lose to dense (gather overhead, no
-                    # savings)
-                    if bucket_size(q_len) >= art.bd.num_vss_pad:
-                        mode = "dense"
-                if mode == "dense":
-                    prefer_host = False  # dense again: windows may resume
-            # ---- one level for every lane --------------------------------
-            ell += 1
-            if mode == "queued":
-                qids = runner.active_vss(active_mask)
-                state, new_lane = runner.level_queued(
-                    state, ell, runner.bucket_qids(qids))
-                self.stats["levels_queued"] += 1
-            else:
-                state, new_lane = runner.level(state, ell)
-                self.stats["levels_dense"] += 1
-            self.stats["levels"] += 1
-            nl = np.asarray(new_lane)
-            self.stats["host_syncs"] += 1
-            reach_host += nl
-            far64 += (ell - admitted_at).astype(np.int64) * nl
-            if self._finish_tick(art, runner, state, lanes, nl, admitted_at,
-                                 far64, reach_host, ell, out):
-                meta_dev = None
-
-    def _finish_tick(self, art: GraphArtifacts, runner: _LaneRunner,
-                     state: LaneState, lanes: list, nl: np.ndarray,
-                     admitted_at: np.ndarray, far64: np.ndarray,
-                     reach_host: np.ndarray, ell: int,
-                     out: dict[int, BfsResult]) -> bool:
-        """Per-lane early exit after a level (or megatick window): extract
-        and free every finished lane; True iff any lane was freed."""
-        done = [i for i in range(self.kappa) if lanes[i] is not None
-                and (nl[i] == 0 or ell - admitted_at[i] >= art.bd.n_ext)]
-        if not done:
-            return False
-        self._extract(art, runner, state, lanes, done, admitted_at, far64,
-                      reach_host, out)
-        for i in done:
-            lanes[i] = None
-        return True
-
-    def _extract(self, art: GraphArtifacts, runner: _LaneRunner,
-                 state: LaneState, lanes: list, done: list[int],
-                 admitted_at: np.ndarray, far64: np.ndarray,
-                 reach_host: np.ndarray,
-                 out: dict[int, BfsResult]) -> None:
-        n = art.graph.n
-        # the done columns are sliced on device (bucketed static-shape
-        # gather, §11.3) so the host copy is (n, |done|), not the full
-        # (n_ext, kappa) levels array; skipped outright when every finished
-        # lane is a closeness query (levels would be discarded)
-        bfs_done = [i for i in done if lanes[i].kind == KIND_BFS]
-        cols = {}
-        if bfs_done:
-            arr = runner.gather_level_cols(state.levels, bfs_done)
-            self.stats["host_syncs"] += 1
-            # one vectorized admission-offset subtraction + permutation for
-            # every finished column (a per-lane loop here was measurable)
-            lv = np.where(arr != UNREACHED,
-                          arr - admitted_at[bfs_done][None, :],
-                          UNREACHED).astype(np.int32)[art.perm]
-            cols = {i: lv[:, k] for k, i in enumerate(bfs_done)}
-        for i in done:
-            q: BfsQuery = lanes[i]
-            levels = None
-            if q.kind == KIND_BFS:
-                levels = cols[i]
-            far = int(far64[i])
-            cc = None
-            if q.kind == KIND_CLOSENESS:
-                cc = float((n - 1) / far) if far > 0 else 0.0
-            out[q.rid] = BfsResult(
-                rid=q.rid, graph=q.graph, source=q.source, kind=q.kind,
-                levels=levels, far=far, reach=int(reach_host[i]),
-                closeness=cc, admitted_at_level=int(admitted_at[i]),
-            )

@@ -1,0 +1,405 @@
+"""Ticket-based service API (DESIGN.md §12): int-compatible tickets with
+completion timestamps, incremental ``step()`` pumping with submission
+between steps, the fair cross-graph scheduler (round-robin / weighted /
+serial), the workload plugin registry — ``distance`` and ``reach``
+verified against the CPU oracle across layout x switching x megatick —
+and the cache/queue edge cases the old graph-serial drain never hit
+(eviction under a live session, re-submission after eviction)."""
+import numpy as np
+import pytest
+
+from repro.core import ref_bfs
+from repro.data import graphs
+from repro.serve.bfs_engine import BfsEngine, Ticket
+from repro.serve import workloads as workloads_mod
+from repro.serve.workloads import Workload
+
+UNREACHED = ref_bfs.UNREACHED
+
+LAYOUTS = ["byteplane", "packed"]
+# (switching, eta): dense-forced, queued-forced, probe-gated auto
+MODES = [("off", 10.0), ("on", 0.0), ("auto", 10.0)]
+MEGATICKS = [1, 4, 64]
+
+
+def _engine(**kw):
+    kw.setdefault("layout", "byteplane")
+    kw.setdefault("use_pallas", False)
+    return BfsEngine(**kw)
+
+
+@pytest.fixture(scope="module")
+def duo():
+    """Small-diameter scale-free + high-diameter ring: the two serving
+    regimes (staggered finishes vs long synchronized traversals)."""
+    return {
+        "kron": graphs.make("kron", scale=6, seed=0),
+        "ring": graphs.make("ring", scale=5),
+    }
+
+
+# ---------------------------------------------------------------- tickets --
+def test_ticket_is_int_compatible(duo):
+    g = duo["kron"]
+    eng = _engine()
+    eng.register_graph("g", g)
+    t = eng.submit("g", 3)
+    assert isinstance(t, int) and isinstance(t, Ticket)
+    assert t == 0 and {t: "x"}[0] == "x"  # usable exactly like the old rid
+    assert not t.done()
+    assert t.latency is None and t.queue_wait is None
+    with pytest.raises(RuntimeError):
+        t.result(wait=False)
+    res = eng.run()
+    assert t.done()
+    assert res[t] is t.result() is t.result(wait=False)
+    assert (t.result().levels == ref_bfs.bfs_levels(g, 3)).all()
+    # timestamp ordering: submit <= admit <= complete, latencies derived
+    assert t.submitted_at <= t.admitted_at <= t.completed_at
+    assert t.queue_wait >= 0 and t.latency >= t.queue_wait
+
+
+def test_ticket_result_pumps_engine(duo):
+    """result() with wait=True drives step() itself — no explicit run()."""
+    g = duo["kron"]
+    eng = _engine()
+    eng.register_graph("g", g)
+    t1, t2 = eng.submit("g", 0), eng.submit("g", 5)
+    assert (t2.result().levels == ref_bfs.bfs_levels(g, 5)).all()
+    assert t1.done()  # same session: both completed by the pumping
+    # the pump consumed only t2's completion notification: t1's is
+    # re-queued and still delivered exactly once by the outer loop
+    assert dict(eng.run()) == {int(t1): t1.result(wait=False)}
+
+
+def test_engine_drops_completed_tickets(duo):
+    """Result lifetime is the caller's ticket: the engine retains no
+    reference after completion (keep_results=False)."""
+    eng = _engine()
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 1)
+    eng.run()
+    assert eng._tickets == {} and eng.results == {}
+    assert t.result(wait=False) is not None
+
+
+# ---------------------------------------------------------- step / online --
+def test_step_returns_each_ticket_once(duo):
+    g = duo["kron"]
+    eng = _engine()
+    eng.register_graph("g", g)
+    want = {eng.submit("g", s): s for s in (0, 1, 2, g.n - 1)}
+    seen = []
+    while eng.has_work():
+        seen += eng.step()
+    assert sorted(int(t) for t in seen) == sorted(int(t) for t in want)
+    for t, s in want.items():
+        assert (t.result(wait=False).levels == ref_bfs.bfs_levels(g, s)).all()
+    assert eng.step() == []  # idle engine: step is a cheap no-op
+
+
+def test_submit_between_steps_joins_live_session(duo):
+    """Mid-flight admission via the public API: a request submitted
+    between step() calls lands in the graph's already-active session."""
+    g = duo["ring"]  # high diameter: plenty of ticks to land inside
+    eng = _engine(kappa=32)
+    eng.register_graph("g", g)
+    first = eng.submit("g", 0)
+    late = None
+    while eng.has_work():
+        eng.step()
+        if late is None and eng.in_flight > 0:
+            late = eng.submit("g", 7)  # session live: joins it mid-flight
+    assert eng.stats["admissions_midflight"] > 0
+    assert late.result(wait=False).admitted_at_level > 0
+    assert (late.result(wait=False).levels == ref_bfs.bfs_levels(g, 7)).all()
+    assert (first.result(wait=False).levels == ref_bfs.bfs_levels(g, 0)).all()
+
+
+# -------------------------------------------------------------- scheduler --
+def test_rr_scheduler_interleaves_graphs(duo):
+    """Two graphs' sessions are in flight simultaneously and the rotation
+    alternates between them — the engine's own stats prove non-serial
+    scheduling — with every result still oracle-exact."""
+    eng = _engine()
+    for name, g in duo.items():
+        eng.register_graph(name, g)
+    want = {}
+    for s in (0, 1, 2, 3):
+        for name, g in duo.items():
+            want[eng.submit(name, s)] = (g, s)
+    res = eng.run()
+    assert eng.stats["max_live_sessions"] >= 2
+    assert eng.stats["session_switches"] > 0
+    assert eng.stats["ticks"] == eng.stats["levels"]
+    for t, (g, s) in want.items():
+        assert (res[t].levels == ref_bfs.bfs_levels(g, s)).all()
+
+
+def test_serial_scheduler_restores_graph_at_a_time(duo):
+    eng = _engine(scheduler="serial")
+    for name, g in duo.items():
+        eng.register_graph(name, g)
+    want = {}
+    for s in (0, 1, 2):
+        for name, g in duo.items():
+            want[eng.submit(name, s)] = (g, s)
+    res = eng.run()
+    assert eng.stats["max_live_sessions"] == 1
+    assert eng.stats["session_switches"] == 0
+    for t, (g, s) in want.items():
+        assert (res[t].levels == ref_bfs.bfs_levels(g, s)).all()
+
+
+def test_weighted_scheduler_finishes_heavy_graph_first(duo):
+    """Identical graphs and identical request sets: the 3-weighted session
+    gets three ticks per rotation, so it drains strictly earlier."""
+    g = duo["ring"]
+    eng = _engine(weights={"a": 3})
+    eng.register_graph("a", g)
+    eng.register_graph("b", g)
+    ta = [eng.submit("a", s) for s in (0, 5, 9)]
+    tb = [eng.submit("b", s) for s in (0, 5, 9)]
+    res = eng.run()
+    assert max(t.completed_at for t in ta) < max(t.completed_at for t in tb)
+    for t, s in zip(ta + tb, [0, 5, 9, 0, 5, 9]):
+        assert (res[t].levels == ref_bfs.bfs_levels(g, s)).all()
+
+
+def test_scheduler_validation(duo):
+    with pytest.raises(ValueError):
+        BfsEngine(scheduler="fifo")
+    with pytest.raises(ValueError):
+        BfsEngine(weights={"g": 0})
+
+
+def test_queue_wait_accounting(duo):
+    """A backlog deeper than kappa leaves later requests queued: their
+    queue wait lands in the per-graph stats key and on the tickets."""
+    g = duo["kron"]
+    eng = _engine(kappa=32)
+    eng.register_graph("g", g)
+    rng = np.random.default_rng(0)
+    tickets = [eng.submit("g", int(s)) for s in rng.integers(0, g.n, 48)]
+    eng.run()
+    assert eng.stats["queue_wait_s:g"] > 0.0
+    assert eng.stats["queue_wait_s:g"] == pytest.approx(
+        sum(t.queue_wait for t in tickets), rel=1e-6)
+
+
+# -------------------------------------------------- workloads: new kinds ---
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("switching,eta", MODES)
+@pytest.mark.parametrize("megatick", MEGATICKS)
+def test_distance_and_reach_match_oracle(duo, layout, switching, eta,
+                                         megatick):
+    """The two new plugin kinds against the CPU oracle in every
+    layout x switching x megatick configuration, interleaved across two
+    graphs (so sessions, windows, and early exits all engage)."""
+    eng = _engine(layout=layout, switching=switching, eta=eta,
+                  megatick=megatick)
+    for name, g in duo.items():
+        eng.register_graph(name, g)
+    rng = np.random.default_rng(1)
+    want = []
+    for name, g in duo.items():
+        for s, t in zip(rng.integers(0, g.n, 4), rng.integers(0, g.n, 4)):
+            want.append((eng.submit(name, int(s), kind="distance",
+                                    target=int(t)), g, int(s), int(t)))
+        for s in rng.integers(0, g.n, 4):
+            want.append((eng.submit(name, int(s), kind="reach"),
+                         g, int(s), None))
+    res = eng.run()
+    for ticket, g, s, t in want:
+        lv = ref_bfs.bfs_levels(g, s)
+        r = res[ticket]
+        if t is not None:
+            exp = None if lv[t] == UNREACHED else int(lv[t])
+            assert r.distance == exp, (layout, switching, megatick, s, t)
+            assert r.levels is None
+        else:
+            assert r.reach == int((lv != UNREACHED).sum()), \
+                (layout, switching, megatick, s)
+            assert r.levels is None and r.closeness is None
+
+
+def test_distance_early_exit_frees_lane(duo):
+    """A near target on the high-diameter ring: the lane exits the tick
+    the target's bit lights, so the session runs a handful of levels
+    instead of the full n/2-level traversal."""
+    g = duo["ring"]
+    eng = _engine(kappa=32)
+    eng.register_graph("g", g)
+    t = eng.submit("g", 0, kind="distance", target=3)  # d(0, 3) = 3
+    res = eng.run()
+    assert res[t].distance == ref_bfs.bfs_levels(g, 0)[3] == 3
+    assert eng.stats["levels"] <= 5  # early exit, not the ~n/2 drain
+
+
+def test_admission_while_distance_lane_watched(duo):
+    """Mid-flight admission into a session whose watch gather already ran:
+    the tl mirror must stay writable (regression — np.asarray of a jax
+    array is read-only)."""
+    g = duo["ring"]  # far target: the distance lane stays in flight
+    eng = _engine(kappa=32)
+    eng.register_graph("g", g)
+    far = g.n // 2
+    td = eng.submit("g", 0, kind="distance", target=far)
+    late = None
+    while eng.has_work():
+        eng.step()
+        if late is None and eng.in_flight > 0:
+            late = eng.submit("g", 5)  # lands after a watch tick
+    lv = ref_bfs.bfs_levels(g, 0)
+    assert td.result(wait=False).distance == int(lv[far])
+    assert (late.result(wait=False).levels == ref_bfs.bfs_levels(g, 5)).all()
+
+
+def test_distance_early_exit_clears_dead_frontier(duo):
+    """A lane freed by target-hit still holds a live frontier; the engine
+    must wipe its column so the dead traversal stops feeding the Eq. (6)
+    aggregate (and queued expansions) while other lanes keep running."""
+    g = duo["ring"]
+    eng = _engine(kappa=32)
+    eng.register_graph("g", g)
+    tb = eng.submit("g", 0)                          # long bfs keeps going
+    td = eng.submit("g", 0, kind="distance", target=3)  # exits at level 3
+    while not td.done():
+        eng.step()
+    sess = eng._sessions["g"]
+    assert sess.lanes[1] is None  # td was admitted second -> lane 1, freed
+    assert np.asarray(sess.state.f)[..., 1].max() == 0  # frontier wiped
+    assert np.asarray(sess.state.v)[..., 1].max() == 0  # visited wiped
+    eng.run()
+    assert (tb.result(wait=False).levels == ref_bfs.bfs_levels(g, 0)).all()
+    assert td.result(wait=False).distance == 3
+
+
+def test_distance_unreachable_is_none():
+    from repro.core.graph import from_edges
+    g = from_edges([0, 1], [1, 2], n=6)  # 3..5 isolated
+    eng = _engine()
+    eng.register_graph("g", g)
+    t = eng.submit("g", 0, kind="distance", target=5)
+    t2 = eng.submit("g", 0, kind="distance", target=0)
+    res = eng.run()
+    assert res[t].distance is None
+    assert res[t2].distance == 0  # target == source
+
+
+def test_distance_validation(duo):
+    eng = _engine()
+    eng.register_graph("g", duo["kron"])
+    with pytest.raises(ValueError):
+        eng.submit("g", 0, kind="distance")  # no target
+    with pytest.raises(ValueError):
+        eng.submit("g", 0, kind="distance", target=duo["kron"].n)
+    with pytest.raises(ValueError):
+        eng.submit("g", 0, kind="pagerank")  # still unknown
+
+
+# ------------------------------------------------- workloads: plugin API ---
+class _LevelHistogram(Workload):
+    """Test plugin: per-level discovery histogram via the accumulate hook
+    (a computation none of the engine's host mirrors provide)."""
+
+    kind = "hist"
+
+    def accumulate(self, acc, depth, new):
+        if new:
+            acc.extra[depth] = acc.extra.get(depth, 0) + new
+
+    def extract(self, lane):
+        return {"extra": {"hist": dict(lane.acc.extra)}}
+
+
+@pytest.mark.parametrize("megatick", [1, 4])
+def test_custom_workload_accumulate_hook(duo, megatick):
+    """A per-engine plugin exercising validate-by-default, the per-level
+    accumulate hook (both per-level and megatick-window paths), and
+    extract() payloads via the `extra` field."""
+    g = duo["kron"]
+    eng = _engine(megatick=megatick, switching="off")
+    eng.register_graph("g", g)
+    eng.register_workload(_LevelHistogram())
+    assert "hist" in eng.workload_kinds
+    t = eng.submit("g", 2, kind="hist")
+    res = eng.run()
+    lv = ref_bfs.bfs_levels(g, 2)
+    want = {int(d): int((lv == d).sum()) for d in np.unique(lv)
+            if d not in (0, UNREACHED)}
+    assert res[t].extra["hist"] == want
+    # registry isolation: other engines don't see the plugin
+    other = _engine()
+    other.register_graph("g", g)
+    with pytest.raises(ValueError):
+        other.submit("g", 0, "hist")
+
+
+def test_register_workload_validation():
+    eng = _engine()
+    with pytest.raises(ValueError):
+        eng.register_workload(Workload())  # empty kind
+    with pytest.raises(ValueError):
+        workloads_mod.register(Workload())
+
+
+# --------------------------------------------------- cache/session edges ---
+def _art_bytes(g):
+    from repro.serve.bfs_engine import build_artifacts
+    return build_artifacts("probe", g).total_bytes
+
+
+def test_eviction_of_graph_with_live_session(duo):
+    """Cache budget of ~1 graph, two graphs in flight simultaneously: the
+    second session's build evicts the first graph's artifacts while its
+    session still holds lanes and a non-empty queue — the session pins
+    its substrate, so every result stays oracle-exact."""
+    ga, gb = duo["ring"], duo["kron"]
+    eng = _engine(kappa=32, cache_bytes=int(_art_bytes(ga) * 1.2))
+    eng.register_graph("a", ga)
+    eng.register_graph("b", gb)
+    rng = np.random.default_rng(2)
+    want = []
+    for s in rng.integers(0, ga.n, 40):  # > kappa: queue stays non-empty
+        want.append((eng.submit("a", int(s)), ga, int(s)))
+    for s in rng.integers(0, gb.n, 4):
+        want.append((eng.submit("b", int(s)), gb, int(s)))
+    res = eng.run()
+    assert eng.cache.evictions >= 1
+    assert eng.stats["max_live_sessions"] >= 2
+    for t, g, s in want:
+        assert (res[t].levels == ref_bfs.bfs_levels(g, s)).all()
+
+
+def test_resubmission_after_eviction_rebuilds(duo):
+    """Artifact rebuild mid-service: a graph evicted while idle is rebuilt
+    on re-submission (cache miss), and both rounds' results are exact."""
+    ga, gb = duo["ring"], duo["kron"]
+    eng = _engine(cache_bytes=1)  # every get() evicts the other entry
+    eng.register_graph("a", ga)
+    eng.register_graph("b", gb)
+    t1 = eng.submit("a", 0)
+    r1 = eng.run()
+    assert (r1[t1].levels == ref_bfs.bfs_levels(ga, 0)).all()
+    t2 = eng.submit("b", 1)
+    eng.run()
+    misses_before = eng.cache.misses
+    t3 = eng.submit("a", 5)  # 'a' was evicted by b's build: rebuild
+    r3 = eng.run()
+    assert eng.cache.misses == misses_before + 1
+    assert eng.cache.evictions >= 2
+    assert (r3[t3].levels == ref_bfs.bfs_levels(ga, 5)).all()
+    assert (t2.result(wait=False).levels == ref_bfs.bfs_levels(gb, 1)).all()
+
+
+def test_keep_results_records_via_step(duo):
+    """keep_results retention works when the caller pumps step() directly
+    (not just through run())."""
+    g = duo["kron"]
+    eng = _engine(keep_results=True)
+    eng.register_graph("g", g)
+    t = eng.submit("g", 4)
+    while not t.done():
+        eng.step()
+    assert (eng.results[t].levels == ref_bfs.bfs_levels(g, 4)).all()
