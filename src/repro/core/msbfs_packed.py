@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blest import BvssDevice
+from repro.kernels import pull_mma_ms_packed as mma
 from repro.kernels.pull_ms_packed import pull_ms_packed
 from repro.kernels.scatter_or import scatter_or
 
@@ -33,10 +34,18 @@ from repro.kernels.scatter_or import scatter_or
 class PackedMsBfs:
     bd: BvssDevice
     interpret: bool | None = None
+    # 'gather' — scalar-prefetch selective-OR pull (kernels/pull_ms_packed);
+    # 'mma'    — blocked binary-MMA pull (kernels/pull_mma_ms_packed,
+    #            DESIGN.md §13): same marks, computed as bit-matrix products
+    kernel: str = "gather"
 
     def __post_init__(self):
         if self.interpret is None:
             self.interpret = jax.default_backend() != "tpu"
+        if self.kernel not in ("gather", "mma"):
+            raise ValueError(f"unknown kernel {self.kernel!r}")
+        self._mma_tiles = (mma.prep_mma_tiles(self.bd)
+                           if self.kernel == "mma" else None)
 
     def run(self, sources: np.ndarray, max_levels: int | None = None):
         """Returns (v_curr packed (n_ext, kw) uint32, far (n_ext,) int32,
@@ -59,12 +68,23 @@ class PackedMsBfs:
         far = jnp.zeros(bd.n_ext, jnp.int32)
         reach = jax.lax.population_count(v).sum(axis=1).astype(jnp.int32)
 
+        tiles = self._mma_tiles
+
         @jax.jit
         def level(v, f, far, reach, ell):
-            marks = pull_ms_packed(bd.masks, f, bd.v2r, sigma=bd.sigma,
-                                   interpret=interp)
-            v_next = scatter_or(v, bd.row_ids.reshape(-1),
-                                marks.reshape(-1, kw), interpret=interp)
+            if tiles is not None:
+                # MMA path: marks over the padded VSS list; the sentinel
+                # rows of the pad tiles scatter into the scratch zone
+                marks = mma.pull_mma_ms_packed(
+                    tiles.a_planes, f, tiles.v2r, sigma=bd.sigma,
+                    block=tiles.block, interpret=interp)
+                rows = tiles.rows
+            else:
+                marks = pull_ms_packed(bd.masks, f, bd.v2r, sigma=bd.sigma,
+                                       interpret=interp)
+                rows = bd.row_ids.reshape(-1)
+            v_next = scatter_or(v, rows, marks.reshape(-1, kw),
+                                interpret=interp)
             diff = v_next & ~v
             new = jax.lax.population_count(diff).sum(axis=1).astype(jnp.int32)
             far = far + ell * new

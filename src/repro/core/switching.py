@@ -52,6 +52,14 @@ class SwitchingDecision:
     # single-source proxy, 'serve' = the kappa-lane serve runner itself
     # (DESIGN.md §11.3)
     proxy: str = "single"
+    # MMA-layout probe extension (DESIGN.md §13.4): best time of the
+    # binary-MMA dense-path runner over both policy variants (None when the
+    # probe was not given an MMA runner), and the dense-layout verdict the
+    # serve engine's layout='auto' consults — 'base' keeps the substrate's
+    # native dense sweep, 'mma' routes dense levels through the bit-MMA
+    # pull.  ``enabled`` always refers to the winning layout's policy pair.
+    time_mma: float | None = None
+    dense_layout: str = "base"
 
 
 def probe_switching_benefit(
@@ -120,6 +128,7 @@ def probe_switching_benefit_serve(
     seed: int = 0,
     *,
     passes: int = 2,
+    mma_runner=None,
 ) -> SwitchingDecision:
     """Serve-aware switching probe (DESIGN.md §11.3): time the kappa-lane
     runner itself — one full batch of ``kappa`` random sources traversed to
@@ -137,6 +146,13 @@ def probe_switching_benefit_serve(
     heuristic, but unlike the single-source proxy the timed substrate,
     kappa, and sweep kernels are exactly the ones the verdict will gate.
 
+    When ``mma_runner`` is given (same ``bd``/``kappa``, dense path routed
+    through the bit-MMA pull — DESIGN.md §13.4), both policy variants are
+    additionally timed on it; ``dense_layout`` records which runner's best
+    time won, ``time_mma`` the MMA runner's best, and ``enabled`` the
+    winning runner's policy comparison — so a layout='auto' engine adopts
+    the probe's layout *and* policy verdict in one shot.
+
     Warmup first (both variants, so the jit cache holds every per-level
     bucket shape), then min over ``passes`` timed runs per variant, exactly
     as in :func:`probe_switching_benefit`."""
@@ -147,48 +163,61 @@ def probe_switching_benefit_serve(
     kappa = runner.kappa
     bd = runner.bd
 
-    def traverse(policy_on: bool):
-        state = runner.init_state()
-        state = runner.reseed(state, np.ones(kappa, bool), sources, 0)
+    def traverse(r, policy_on: bool):
+        state = r.init_state()
+        state = r.reseed(state, np.ones(kappa, bool), sources, 0)
         reach = np.ones(kappa, np.int64)
         ell = 0
         while True:
             mode = "dense"
             active_mask = None
             if policy_on:
-                active_mask = runner.active_set_mask(state.f)
-                q_len = runner.queue_len(active_mask)
+                active_mask = r.active_set_mask(state.f)
+                q_len = r.queue_len(active_mask)
                 unvisited = int((n - reach).sum())
                 mode = decide_mode(unvisited, q_len, eta)
                 if blest.bucket_size(q_len) >= bd.num_vss_pad:
                     mode = "dense"
             ell += 1
             if mode == "queued":
-                qids = runner.active_vss(active_mask)
-                state, new_lane = runner.level_queued(
-                    state, ell, runner.bucket_qids(qids))
+                qids = r.active_vss(active_mask)
+                state, new_lane = r.level_queued(
+                    state, ell, r.bucket_qids(qids))
             else:
-                state, new_lane = runner.level(state, ell)
+                state, new_lane = r.level(state, ell)
             nl = np.asarray(new_lane)
             reach += nl
             if nl.sum() == 0 or ell >= bd.n_ext:
                 return state
 
-    for on in (True, False):  # warmup: compile every per-level shape
-        jax.block_until_ready(traverse(on).v)
+    runners = {"base": runner}
+    if mma_runner is not None:
+        runners["mma"] = mma_runner
+    for r in runners.values():  # warmup: compile every per-level shape
+        for on in (True, False):
+            jax.block_until_ready(traverse(r, on).v)
     times = {}
-    for on in (True, False):
-        best = float("inf")
-        for _ in range(passes):
-            t0 = time.perf_counter()
-            jax.block_until_ready(traverse(on).v)
-            best = min(best, time.perf_counter() - t0)
-        times[on] = best
+    for name, r in runners.items():
+        for on in (True, False):
+            best = float("inf")
+            for _ in range(passes):
+                t0 = time.perf_counter()
+                jax.block_until_ready(traverse(r, on).v)
+                best = min(best, time.perf_counter() - t0)
+            times[name, on] = best
+    t_mma = (min(times["mma", True], times["mma", False])
+             if mma_runner is not None else None)
+    layout = "base"
+    if t_mma is not None and t_mma < min(times["base", True],
+                                         times["base", False]):
+        layout = "mma"
     return SwitchingDecision(
-        enabled=times[True] < times[False],
-        time_with=times[True],
-        time_without=times[False],
+        enabled=times[layout, True] < times[layout, False],
+        time_with=times["base", True],
+        time_without=times["base", False],
         proxy="serve",
+        time_mma=t_mma,
+        dense_layout=layout,
     )
 
 

@@ -1,0 +1,333 @@
+"""MMA-layout packed multi-source pull: neighbor checks as blocked binary
+matrix products (DESIGN.md §13).
+
+The paper's headline trick maps the bit-level frontier×adjacency neighbor
+check onto binary MMA instructions with *no wasted outputs*: every element
+of the product tile is a needed (slot, lane) check.  The VPU formulation in
+:mod:`repro.kernels.pull_ms_packed` evaluates, per VSS ``q`` with sigma-bit
+masks ``m`` and parent frontier tile ``F``,
+
+    marks[q, j, w] = OR_{b : m[j]_b = 1}  F[v2r[q]][b, w]
+
+as ``sigma`` selective ORs.  Observed bit-level, that OR-reduction *is* a
+binary matrix product: with ``A[q] = unpack(m)`` the (tau, sigma) 0/1 mask
+matrix and ``B[q] = unpack(F[v2r[q]])`` the (sigma, kappa) 0/1 frontier
+plane matrix,
+
+    marks_bit[q] = (A[q] @ B[q]  >  0)           -- one MMA per VSS tile,
+
+an integer matmul whose (tau, kappa) output tile holds exactly the
+tau*kappa neighbor checks the level needs — the MXU analogue of the
+paper's ``BMMA`` formulation (SlimSell's vectorizable-representation
+framing applied to the packed lanes).  ``A`` is static per graph, so it is
+unpacked to int8 planes **once** at tile-prep time (:func:`prep_mma_tiles`,
+held in ``GraphArtifacts`` and counted against the cache budget);
+``B`` changes every level and is unpacked in-kernel from the packed words.
+
+Three entry points, each with a bit-identical jnp reference twin (the PR 4
+pattern — the twin is the CPU path and the oracle):
+
+* :func:`pull_mma_ms_packed` — the blocked Pallas kernel: the grid walks
+  ``n_q // block`` steps, each feeding the MXU one batched
+  ``(block, tau, sigma) x (block, sigma, kappa)`` int8 ``dot_general`` and
+  packing the sign of the counts back to ``(block, tau, kw)`` uint32 marks.
+  The frontier tiles are pre-gathered by XLA (``f_packed[v2r]``) so the
+  grid can block over VSS tiles — the one deliberate departure from the
+  scalar-prefetch pulls, which trade blocking for gather-freedom.
+* :func:`pull_scatter_mma_ms_packed` — the fused scatter variant
+  (DESIGN.md §11.2 applied to the MMA pull): phase 2 computes each mark
+  row as a ``(1, sigma) x (sigma, kappa)`` product and ORs it straight
+  into the live visited words, so the marks array never exists.  Its jnp
+  twin exploits the count formulation: integer counts are scatter-**add**
+  safe (OR is not XLA-native), so one ``at[].add`` pass replaces the
+  32-bit-plane scatter-max ladder of ``scatter_or_ref`` — the popcount
+  path, and the reason the MMA layout beats the fused gather kernel on
+  dense levels off-TPU (benchmarks/serve_mma.py).
+* :func:`pull_mma_byteplane_ref` — the AND-OR/popcount fallback for the
+  byteplane substrate: same counts-matmul over uint8 bit-planes,
+  bit-identical to ``kernels.ref.pull_ms_ref``.
+
+Tile prep pads the VSS list to a multiple of the MMA block with *masked*
+tiles (zero mask planes, sentinel parent set, sentinel scatter rows) — the
+explicit pad-and-mask that the blocked grid requires (a ragged last tile
+would otherwise read out of bounds); :func:`pull_mma_ms_packed` asserts the
+alignment instead of assuming it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+MMA_VSS_BLOCK = 8  # VSS tiles per grid step (batched MXU dot)
+
+
+# ---------------------------------------------------------------------------
+# Tile prep (graph-static: built once, cached in GraphArtifacts)
+# ---------------------------------------------------------------------------
+
+
+def unpack_mask_planes(masks: np.ndarray, sigma: int) -> np.ndarray:
+    """(N, tau) uint8 sigma-bit masks -> (N, tau, sigma) int8 0/1 planes —
+    the static ``A`` operand of the binary MMA."""
+    m = np.asarray(masks)
+    return ((m[..., None] >> np.arange(sigma, dtype=np.uint8)) & 1).astype(
+        np.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class MmaTiles:
+    """Graph-static MMA operands (DESIGN.md §13.1), device-resident and
+    counted against the :class:`~repro.serve.bfs_engine.GraphCache` byte
+    budget like every other per-graph substrate array.
+
+    ``a_planes``/``v2r``/``rows`` serve the packed-word kernels; the VSS
+    dimension is padded to a multiple of ``block`` with masked tiles (zero
+    planes, sentinel parent set ``num_sets``, sentinel rows ``n_pad``) so
+    the blocked grid divides evenly — pad tiles contribute zero counts and
+    their scatter rows land in the sentinel scratch zone.  ``nz_planes``
+    is the byteplane-substrate twin: mask planes of the slice-compacted
+    nonzero-slot list (§11.2 ``_nz_*`` ordering, sentinel entry last).
+    """
+
+    a_planes: jax.Array   # (n_q_pad, tau, sigma) int8
+    v2r: jax.Array        # (n_q_pad,) int32 — sentinel-padded parent sets
+    rows: jax.Array       # (n_q_pad * tau,) int32 — sentinel-padded rows
+    nz_planes: jax.Array  # (S + 1, sigma) int8 — compacted byteplane A rows
+    block: int
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in
+                   (self.a_planes, self.v2r, self.rows, self.nz_planes))
+
+
+def prep_mma_tiles(bd, *, block: int = MMA_VSS_BLOCK) -> MmaTiles:
+    """Unpack the BVSS masks to int8 MMA planes, explicitly pad-and-mask
+    the VSS list to a ``block`` multiple, and compact the byteplane twin.
+
+    ``bd`` is a :class:`repro.core.blest.BvssDevice`.  The pad rows are
+    *masked*, not merely present: zero planes produce zero counts, the
+    sentinel ``v2r`` names the always-empty frontier tile, and the
+    sentinel rows scatter into the ``n_pad..n_ext`` scratch rows — so a
+    misaligned graph (``num_vss_pad % block != 0``) is exact, not
+    truncated (tests/test_mma_layout.py pins a deliberately misaligned n).
+    """
+    masks = np.asarray(bd.masks)
+    n_q, tau = masks.shape
+    pad = (-n_q) % block
+    a = unpack_mask_planes(masks, bd.sigma)
+    if pad:
+        a = np.concatenate([a, np.zeros((pad, tau, bd.sigma), np.int8)])
+    v2r = np.concatenate([np.asarray(bd.v2r),
+                          np.full(pad, bd.num_sets, np.int32)]).astype(
+        np.int32)
+    rows = np.concatenate([np.asarray(bd.row_ids),
+                           np.full((pad, tau), bd.n_pad, np.int32)]).astype(
+        np.int32).reshape(-1)
+    # byteplane twin: planes of the slice-compacted nonzero mask bytes, in
+    # the engine's _nz_* order (np.nonzero row-major) + the sentinel entry
+    nz_vss, nz_slot = np.nonzero(masks)
+    nz_mask = np.append(masks[nz_vss, nz_slot], 0).astype(np.uint8)
+    return MmaTiles(
+        a_planes=jnp.asarray(a),
+        v2r=jnp.asarray(v2r),
+        rows=jnp.asarray(rows),
+        nz_planes=jnp.asarray(unpack_mask_planes(nz_mask, bd.sigma)),
+        block=block,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Blocked MMA pull (marks materialized; core/msbfs_packed + parity suite)
+# ---------------------------------------------------------------------------
+
+
+def _unpack_words(words, kw: int):
+    """(..., kw) uint32 -> (..., kw*32) int8 0/1 bit-planes."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.astype(jnp.int8).reshape(*words.shape[:-1], kw * 32)
+
+
+def _pack_bits(bits):
+    """(..., kw, 32) bool/int -> (..., kw) uint32 packed words."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (bits.astype(jnp.uint32) << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+def _pull_mma_kernel(a_ref, ft_ref, out_ref, *, kw):
+    a = a_ref[...]                       # (B, tau, sigma) int8
+    ft = ft_ref[...]                     # (B, sigma, kw) uint32
+    planes = _unpack_words(ft, kw)       # (B, sigma, kappa) int8
+    # the binary MMA: one batched int8 product per grid step; every element
+    # of the (tau, kappa) output tile is a needed neighbor check
+    counts = jax.lax.dot_general(
+        a, planes, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)  # (B, tau, kappa)
+    bits = (counts > 0).reshape(*counts.shape[:-1], kw, 32)
+    out_ref[...] = _pack_bits(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "block", "interpret"))
+def pull_mma_ms_packed(
+    a_planes: jax.Array,   # (n_q_pad, tau, sigma) int8 — prep_mma_tiles
+    f_packed: jax.Array,   # (num_sets_ext, sigma, kw) uint32 frontier words
+    v2r: jax.Array,        # (n_q_pad,) int32 — sentinel-padded parent sets
+    *,
+    sigma: int = 8,
+    block: int = MMA_VSS_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """marks (n_q_pad, tau, kw) uint32 — the dense packed pull as blocked
+    binary matrix products.  Bit-identical to
+    ``pull_ms_packed(masks, f_packed, v2r)`` over the real VSS prefix."""
+    n_q, tau, sig = a_planes.shape
+    _, sig_f, kw = f_packed.shape
+    assert sig == sigma and sig_f == sigma
+    if n_q % block:
+        raise ValueError(
+            f"MMA grid needs the VSS count padded to the block: {n_q} tiles "
+            f"% block {block} != 0 — run prep_mma_tiles (pad-and-mask), the "
+            f"kernel does not truncate ragged last tiles")
+    # XLA pre-gathers the per-VSS frontier tiles so the grid can block over
+    # VSS tiles (the scalar-prefetch pulls cannot batch the MXU this way)
+    f_tiles = f_packed[v2r]
+    return pl.pallas_call(
+        functools.partial(_pull_mma_kernel, kw=kw),
+        grid=(n_q // block,),
+        in_specs=[
+            pl.BlockSpec((block, tau, sigma), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, sigma, kw), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, tau, kw), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, tau, kw), jnp.uint32),
+        interpret=interpret,
+    )(a_planes, f_tiles)
+
+
+def pull_mma_ms_packed_ref(a_planes, f_tiles):
+    """Oracle twin: the same counts matmul in one batched XLA dot.
+    ``f_tiles`` is pre-gathered ``f_packed[v2r]`` (the convention of
+    ``pull_ms_packed_ref``); bit-identical to it and to the kernel."""
+    kw = f_tiles.shape[-1]
+    planes = _unpack_words(f_tiles, kw)
+    counts = jax.lax.dot_general(
+        a_planes, planes, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)
+    return _pack_bits((counts > 0).reshape(*counts.shape[:-1], kw, 32))
+
+
+# ---------------------------------------------------------------------------
+# Fused MMA pull + scatter (visited words update in-kernel)
+# ---------------------------------------------------------------------------
+
+
+def _pull_scatter_mma_kernel(rows_ref, v2r_ref, dest_ref, a_ref, f_ref,
+                             out_ref, *, n_rows, kw):
+    del rows_ref, v2r_ref  # consumed by the index maps only
+    s = pl.program_id(0)
+    init_phase = s < n_rows
+    a = a_ref[...]                       # (1, sigma) int8 — this slot's row
+    f = f_ref[...][0]                    # (sigma, kw) uint32
+    planes = _unpack_words(f, kw)        # (sigma, kappa) int8
+    counts = jax.lax.dot_general(
+        a, planes, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)  # (1, kappa)
+    acc = _pack_bits((counts[0] > 0).reshape(kw, 32))  # (kw,) uint32
+    cur = out_ref[...]
+    out_ref[...] = jnp.where(init_phase, dest_ref[...], cur | acc[None])
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def pull_scatter_mma_ms_packed(
+    v: jax.Array,          # (n_rows, kw) uint32 visited words
+    a_planes: jax.Array,   # (n_q_pad, tau, sigma) int8 — prep_mma_tiles
+    f_packed: jax.Array,   # (num_sets_ext, sigma, kw) uint32 frontier words
+    v2r: jax.Array,        # (n_q_pad,) int32 — sentinel-padded parent sets
+    rows: jax.Array,       # (n_q_pad*tau,) int32 — sentinel-padded rows
+    *,
+    sigma: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns ``v`` with the MMA pull's marks OR-scattered in — the
+    §11.2 fused grid (init copy, then one slot per step) with the mark row
+    computed as a ``(1, sigma) x (sigma, kappa)`` product instead of the
+    selective-OR ladder.  Bit-identical to ``pull_scatter_ms_packed``."""
+    import jax.experimental.pallas.tpu as pltpu
+
+    n_rows, kw = v.shape
+    n_q, tau, sig = a_planes.shape
+    assert sig == sigma
+    t = rows.shape[0]
+    assert t == n_q * tau
+    a_flat = a_planes.reshape(t, sigma)
+
+    def dest_index(s, rows_, v2r_):
+        return (jnp.where(s < n_rows, s, 0), 0)
+
+    def a_index(s, rows_, v2r_):
+        return (jnp.clip(s - n_rows, 0, t - 1), 0)
+
+    def f_index(s, rows_, v2r_):
+        return (v2r_[jnp.clip(s - n_rows, 0, t - 1) // tau], 0, 0)
+
+    def out_index(s, rows_, v2r_):
+        e = jnp.clip(s - n_rows, 0, t - 1)
+        return (jnp.where(s < n_rows, s, rows_[e]), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_rows + t,),
+        in_specs=[
+            pl.BlockSpec((1, kw), dest_index),
+            pl.BlockSpec((1, sigma), a_index),
+            pl.BlockSpec((1, sigma, kw), f_index),
+        ],
+        out_specs=pl.BlockSpec((1, kw), out_index),
+    )
+    return pl.pallas_call(
+        functools.partial(_pull_scatter_mma_kernel, n_rows=n_rows, kw=kw),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        interpret=interpret,
+    )(rows, v2r, v, a_flat, f_packed)
+
+
+def pull_scatter_mma_ms_packed_ref(v, a_planes, f_packed, v2r, rows):
+    """Oracle twin — and the fast CPU path of the MMA layout: the counts
+    are plain integers, so the duplicate-safe combine is scatter-**add**
+    (one XLA pass) instead of ``scatter_or_ref``'s 32 bit-plane
+    scatter-max passes; the packed OR happens after, on the (n, kw)
+    result.  Bit-identical to the fused kernel and to
+    ``pull_scatter_ms_packed_ref``."""
+    kw = v.shape[1]
+    kappa = kw * 32
+    planes = _unpack_words(f_packed[v2r], kw)           # (n_q, sigma, kappa)
+    counts = jax.lax.dot_general(
+        a_planes, planes, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)               # (n_q, tau, kappa)
+    acc = jnp.zeros((v.shape[0], kappa), jnp.int32).at[rows].add(
+        counts.reshape(-1, kappa))
+    return v | _pack_bits((acc > 0).reshape(v.shape[0], kw, 32))
+
+
+# ---------------------------------------------------------------------------
+# Byteplane-substrate fallback (AND-OR as popcount over uint8 planes)
+# ---------------------------------------------------------------------------
+
+
+def pull_mma_byteplane_ref(a_planes, f_tiles):
+    """The byteplane-substrate MMA fallback: counts matmul over uint8
+    bit-planes.  ``a_planes`` (N, tau, sigma) int8 (or (N, sigma) for
+    slice-compacted rows, via a leading reshape), ``f_tiles``
+    (N, sigma, kappa) uint8 in {0,1}; returns (N, tau, kappa) uint8 marks,
+    bit-identical to ``kernels.ref.pull_ms_ref(masks, f_tiles)``."""
+    counts = jax.lax.dot_general(
+        a_planes, f_tiles.astype(jnp.int8), (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)
+    return (counts > 0).astype(jnp.uint8)

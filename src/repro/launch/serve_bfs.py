@@ -62,7 +62,12 @@ def main():
     ap.add_argument("--cache-mb", type=float, default=None,
                     help="artifact cache budget in MiB (default: unbounded)")
     ap.add_argument("--layout", default="auto",
-                    choices=["auto", "packed", "byteplane"])
+                    choices=["auto", "packed", "byteplane", "mma"],
+                    help="lane substrate (DESIGN.md §13): auto picks per "
+                         "backend (and per graph, when the probe's "
+                         "dense_layout verdict selects the bit-MMA pull); "
+                         "mma forces dense levels through the binary-MMA "
+                         "kernels")
     ap.add_argument("--scheduler", default="rr", choices=["rr", "serial"],
                     help="cross-graph scheduling (DESIGN.md §12.2): rr "
                          "interleaves per-graph sessions round-robin, "
@@ -174,7 +179,11 @@ def main():
                    f"probe[{sw.proxy}] "
                    f"{'enabled' if sw.enabled else 'disabled'} "
                    f"(with={sw.time_with * 1e3:.1f}ms "
-                   f"without={sw.time_without * 1e3:.1f}ms)")
+                   f"without={sw.time_without * 1e3:.1f}ms"
+                   + (f" mma={sw.time_mma * 1e3:.1f}ms "
+                      f"dense_layout={sw.dense_layout}"
+                      if sw.time_mma is not None else "")
+                   + ")")
         print(f"    reorder={art.reorder.algorithm} "
               f"scale_free={art.reorder.scale_free} switching: {verdict}")
     c = eng.cache

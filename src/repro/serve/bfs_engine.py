@@ -24,7 +24,7 @@ graphs than fit on the accelerator at once.
 
 Lane substrates
 ---------------
-Two bit-for-bit equivalent lane layouts implement the level step:
+Three bit-for-bit equivalent lane layouts implement the level step:
 
 * ``layout='packed'`` — the paper-faithful kappa-bit packed words
   (``(n_ext, kappa/32)`` uint32) driven by the fused
@@ -37,10 +37,23 @@ Two bit-for-bit equivalent lane layouts implement the level step:
   XLA-native scatter-max OR (``core/msbfs.py`` mechanics), slice-compacted
   to the static nonzero-mask slot list on the jnp path (§11.2).  The fast
   path on CPU backends, where Pallas interpret mode is impractical.
+* ``layout='mma'`` — the tensor-core formulation (DESIGN.md §13): dense
+  levels route the pull through blocked binary matrix products
+  (``kernels/pull_mma_ms_packed.py``) instead of selective-OR ladders,
+  over the packed substrate when Pallas kernels are on (the fused MMA
+  scatter variant feeds the MXU) and over the slice-compacted byteplane
+  substrate otherwise (the AND-OR/popcount fallback).  Queued levels are
+  substrate-shared with the host layout.  Needs the per-graph
+  :class:`~repro.kernels.pull_mma_ms_packed.MmaTiles` (int8 mask planes,
+  built by ``GraphArtifacts`` tile prep and counted against the cache
+  budget).
 
-``layout='auto'`` picks packed on TPU, byteplane elsewhere.  Results are
-identical either way (tests/test_serve_engine.py asserts it), so the choice
-is purely a performance knob.
+``layout='auto'`` picks packed on TPU, byteplane elsewhere — unless the
+switching probe also timed the MMA runner and its ``dense_layout`` verdict
+says the bit-MMA dense path wins on this graph (§13.4).  Results are
+identical in every layout (tests/test_serve_engine.py,
+tests/test_mma_layout.py assert it), so the choice is purely a
+performance knob.
 
 Per-level mode switching (DESIGN.md §10)
 ----------------------------------------
@@ -144,6 +157,7 @@ from repro.core.bvss import Bvss, BvssConfig, build_bvss
 from repro.core.graph import Graph
 from repro.core.msbfs_packed import frontier_planes, unpack_levels_check
 from repro.kernels import ops
+from repro.kernels import pull_mma_ms_packed as mma_mod
 from repro.kernels.pull_ms_packed_queued import (
     pull_ms_packed_queued, pull_ms_packed_queued_ref)
 from repro.kernels.pull_scatter_ms_packed import (
@@ -156,6 +170,7 @@ from repro.serve.workloads import (  # re-exported: the request/result
 
 SWITCHING_MODES = ("auto", "on", "off")
 SCHEDULERS = ("rr", "serial")
+LAYOUTS = ("auto", "packed", "byteplane", "mma")
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +280,12 @@ class GraphArtifacts:
     reorder: reorder_mod.ReorderResult
     switching: switching_mod.SwitchingDecision | None
     device_bytes: int       # substrate arrays resident on the accelerator
-    aux_bytes: int          # reorder/probe artifacts kept alongside them
+    aux_bytes: int          # reorder/probe/MMA-tile artifacts alongside them
+    # MMA-layout tile prep (DESIGN.md §13.1): int8 mask planes + padded
+    # scatter metadata, built when the engine may route this graph through
+    # the bit-MMA pull; its nbytes are in aux_bytes (the eviction budget
+    # must see layout-auxiliary device arrays too, or the cache over-admits)
+    mma: mma_mod.MmaTiles | None = None
 
     @property
     def total_bytes(self) -> int:
@@ -283,23 +303,35 @@ def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
                     probe: bool = False,
                     eta: float = switching_mod.ETA_DEFAULT,
                     probe_use_pallas: bool = False,
-                    probe_runner=None) -> GraphArtifacts:
+                    probe_runner=None,
+                    mma_tiles: bool = False) -> GraphArtifacts:
     """Preprocess ``g`` for serving: reorder -> BVSS -> device arrays, plus
     (``probe=True``) the paper's switching probe, whose verdict is cached
     in the artifact.  ``probe_runner`` (a ``bd -> runner`` factory, supplied
     by :class:`BfsEngine`) switches the probe from the single-source
     ``BucketedBfs`` proxy to the serve-aware variant that times the
-    kappa-lane runner itself (DESIGN.md §11.3)."""
+    kappa-lane runner itself (DESIGN.md §11.3).
+
+    ``mma_tiles=True`` additionally runs the §13.1 tile prep (int8 MMA
+    mask planes, cached in ``art.mma`` and counted in ``aux_bytes``); the
+    tiles are then handed to ``probe_runner`` as a second argument so the
+    probe can time the bit-MMA dense path and record a ``dense_layout``
+    verdict (§13.4) — factories taking one argument are only ever called
+    when no tiles were requested."""
     config = config or BvssConfig()
     rr = reorder_mod.reorder(g, sigma=config.sigma, force=reorder)
     gp = g.permuted(rr.perm)
     b = build_bvss(gp, config)
     bd = blest.to_device(b)
+    tiles = mma_mod.prep_mma_tiles(bd) if mma_tiles else None
     sw = None
     if probe:
         if probe_runner is not None:
+            made = (probe_runner(bd, tiles) if tiles is not None
+                    else probe_runner(bd))
+            base, alt = (made if isinstance(made, tuple) else (made, None))
             sw = switching_mod.probe_switching_benefit_serve(
-                probe_runner(bd), g.n, eta=eta)
+                base, g.n, eta=eta, mma_runner=alt)
         else:
             sw = switching_mod.probe_switching_benefit(
                 bd, eta=eta, use_pallas=probe_use_pallas)
@@ -308,13 +340,16 @@ def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
         arrays.append(bd.masks_packed)
     dev_bytes = sum(int(a.nbytes) for a in arrays)
     perm = np.asarray(rr.perm)
-    # the O(n) permutation and the probe verdict live for exactly as long as
-    # the entry does, so they count against the eviction budget too —
-    # previously only the substrate arrays were accounted
-    aux_bytes = int(perm.nbytes) + (_PROBE_DECISION_BYTES if sw else 0)
+    # the O(n) permutation, the probe verdict, and the MMA tile prep live
+    # for exactly as long as the entry does, so they count against the
+    # eviction budget too — previously only the substrate arrays were
+    # accounted
+    aux_bytes = (int(perm.nbytes) + (_PROBE_DECISION_BYTES if sw else 0)
+                 + (tiles.nbytes if tiles is not None else 0))
     return GraphArtifacts(name=name, graph=g, bvss=b, bd=bd, perm=perm,
                           reorder=rr, switching=sw,
-                          device_bytes=dev_bytes, aux_bytes=aux_bytes)
+                          device_bytes=dev_bytes, aux_bytes=aux_bytes,
+                          mma=tiles)
 
 
 class GraphCache:
@@ -332,13 +367,15 @@ class GraphCache:
                  probe: bool = False,
                  eta: float = switching_mod.ETA_DEFAULT,
                  probe_use_pallas: bool = False,
-                 probe_runner=None):
+                 probe_runner=None,
+                 mma_tiles: bool = False):
         self.max_bytes = max_bytes
         self.config = config or BvssConfig()
         self.probe = probe
         self.eta = eta
         self.probe_use_pallas = probe_use_pallas
         self.probe_runner = probe_runner
+        self.mma_tiles = mma_tiles
         self._specs: dict[str, tuple[Graph, str | None]] = {}
         self._entries: OrderedDict[str, GraphArtifacts] = OrderedDict()
         self.hits = 0
@@ -395,7 +432,8 @@ class GraphCache:
         art = build_artifacts(name, g, reorder=reorder, config=self.config,
                               probe=self.probe, eta=self.eta,
                               probe_use_pallas=self.probe_use_pallas,
-                              probe_runner=self.probe_runner)
+                              probe_runner=self.probe_runner,
+                              mma_tiles=self.mma_tiles)
         self._entries[name] = art
         self._entries.move_to_end(name)
         self._shrink()
@@ -443,12 +481,13 @@ class _LaneRunner:
     """
 
     def __init__(self, bd: BvssDevice, kappa: int, *, layout: str = "auto",
-                 use_pallas: bool | None = None):
+                 use_pallas: bool | None = None,
+                 mma_tiles: mma_mod.MmaTiles | None = None):
         if kappa % 32 != 0:
             raise ValueError("kappa must be a multiple of 32 (packed words)")
         if layout == "auto":
             layout = "packed" if jax.default_backend() == "tpu" else "byteplane"
-        if layout not in ("packed", "byteplane"):
+        if layout not in ("packed", "byteplane", "mma"):
             raise ValueError(layout)
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
@@ -456,6 +495,15 @@ class _LaneRunner:
         self.kappa = kappa
         self.kw = kappa // 32
         self.layout = layout
+        # the MMA layout changes only the *dense pull* (DESIGN.md §13.2);
+        # state, reseed, and queued sweeps follow the substrate — packed
+        # words when Pallas kernels drive the fused MMA scatter, the
+        # slice-compacted byteplane (popcount fallback) on the jnp path
+        self._mma = layout == "mma"
+        self.substrate = (("packed" if use_pallas else "byteplane")
+                          if self._mma else layout)
+        self._tiles = (mma_tiles if mma_tiles is not None
+                       else mma_mod.prep_mma_tiles(bd)) if self._mma else None
         self.use_pallas = use_pallas
         self._interpret = jax.default_backend() != "tpu"
         self._level_fn = jax.jit(self._level)
@@ -467,7 +515,7 @@ class _LaneRunner:
         self._real_ptrs = np.asarray(bd.real_ptrs)
         self._pad_vss = bd.num_vss  # a guaranteed padding VSS id
         self._rows_flat = bd.row_ids.reshape(-1)  # fused-kernel scatter rows
-        self._compact = layout == "byteplane" and not use_pallas
+        self._compact = self.substrate == "byteplane" and not use_pallas
         if self._compact:
             # slice-compacted pulls (§11.2): the (num_vss_pad, tau) grid is
             # mostly padding (zero masks -> zero marks -> no-op scatter
@@ -520,7 +568,7 @@ class _LaneRunner:
         build per drain was measurable host overhead)."""
         if self._init_state is None:
             bd, kappa = self.bd, self.kappa
-            if self.layout == "packed":
+            if self.substrate == "packed":
                 v = jnp.zeros((bd.n_ext, self.kw), jnp.uint32)
             else:
                 v = jnp.zeros((bd.n_ext, kappa), jnp.uint8)
@@ -538,7 +586,15 @@ class _LaneRunner:
     # ---- one level over all lanes -----------------------------------------
     def _pull_scatter(self, v, f):
         bd = self.bd
-        if self.layout == "byteplane":
+        if self.substrate == "byteplane":
+            if self._mma:
+                # §13.3 AND-OR/popcount fallback: the dense pull over the
+                # slice-compacted slots as one int8 counts matmul instead
+                # of the sigma-pass OR ladder — marks are (counts > 0)
+                ft = f[self._nz_parent]  # (S, sigma, kappa) uint8 planes
+                marks = mma_mod.pull_mma_byteplane_ref(
+                    self._tiles.nz_planes[:, None, :], ft)[:, 0]
+                return v.at[self._nz_rows].max(marks)
             if self.use_pallas:
                 marks = ops.pull_ms(bd.masks, f, bd.v2r, sigma=bd.sigma,
                                     use_pallas=True)
@@ -555,6 +611,18 @@ class _LaneRunner:
                 sel = ((self._nz_mask >> b) & 1)[:, None]
                 marks = marks | (sel * ft[:, b])
             return v.at[self._nz_rows].max(marks)
+        if self._mma:
+            # §13.2 fused MMA pull+scatter: each mark row is a
+            # (1, sigma) x (sigma, kappa) binary product ORed into the
+            # live visited words (kernel), or — jnp twin — one batched
+            # counts matmul + duplicate-safe scatter-add
+            t = self._tiles
+            if self.use_pallas:
+                return mma_mod.pull_scatter_mma_ms_packed(
+                    v, t.a_planes, f, t.v2r, t.rows, sigma=bd.sigma,
+                    interpret=self._interpret)
+            return mma_mod.pull_scatter_mma_ms_packed_ref(
+                v, t.a_planes, f, t.v2r, t.rows)
         # fused pull+scatter (DESIGN.md §11.2): marks are computed in
         # registers and ORed straight into the visited words — no
         # (N_q*tau, kw) marks array between the pull and the scatter
@@ -569,9 +637,12 @@ class _LaneRunner:
         """Frontier-compacted pull+scatter over the active list only
         (DESIGN.md §10.1): work ~ |Q| * tau instead of N_v * tau — or
         ~ |active slices| on the slice-compacted path, where ``qids`` are
-        slice ids (``bucket_qids`` expands VSS ids through ``_nz_ptrs``)."""
+        slice ids (``bucket_qids`` expands VSS ids through ``_nz_ptrs``).
+        The MMA layout shares this path unchanged: queued sweeps are
+        sparse gathers, which the bit-MMA formulation does not help
+        (DESIGN.md §13.2)."""
         bd = self.bd
-        if self.layout == "byteplane":
+        if self.substrate == "byteplane":
             if self._compact:
                 # slice-compacted queued pull (§11.2): gather the active
                 # slices' mask bytes / parent tiles / rows directly
@@ -608,14 +679,15 @@ class _LaneRunner:
 
     def _lane_bits(self, diff):
         """diff rows -> (n_ext, kappa) 0/1 int32 newly-visited matrix."""
-        if self.layout == "byteplane":
+        if self.substrate == "byteplane":
             return diff.astype(jnp.int32)
         return unpack_levels_check(diff, self.kappa).astype(jnp.int32)
 
     def _finish_level(self, state: LaneState, v_next, ell):
         """Shared tail of both sweeps: diff, level stamps, frontier tiles."""
         v = state.v
-        diff = v_next & ~v if self.layout == "packed" else v_next & (1 - v)
+        diff = (v_next & ~v if self.substrate == "packed"
+                else v_next & (1 - v))
         bits = self._lane_bits(diff)
         new_lane = bits.sum(axis=0)
         return LaneState(
@@ -798,7 +870,7 @@ class _LaneRunner:
         lanes = jnp.arange(kappa)
         has = new_src >= 0
         src = jnp.where(has, new_src, 0)
-        if self.layout == "packed":
+        if self.substrate == "packed":
             # one uint32 per word with the cleared lanes' bits set
             word_mask = self._lane_word_mask(clear)
             v = state.v & ~word_mask[None, :]
@@ -866,7 +938,7 @@ class _GraphSession:
         self.queue = queue
         art = engine.cache.get(name)
         self.art = art
-        self.runner = engine._runner_for(name, art.bd)
+        self.runner = engine._runner_for(art)
         kappa = engine.kappa
         self.lanes: list[BfsQuery | None] = [None] * kappa
         self.wl: list[Workload | None] = [None] * kappa
@@ -1197,6 +1269,9 @@ class BfsEngine:
                  workloads: dict[str, Workload] | None = None):
         if kappa % 32 != 0 or kappa <= 0:
             raise ValueError("kappa must be a positive multiple of 32")
+        if layout not in LAYOUTS:
+            raise ValueError(
+                f"layout must be one of {LAYOUTS}, got {layout!r}")
         if switching not in SWITCHING_MODES:
             raise ValueError(
                 f"switching must be one of {SWITCHING_MODES}, got {switching!r}")
@@ -1227,13 +1302,21 @@ class BfsEngine:
         # benchmarks/common.py), so the probe only uses Pallas on real TPUs
         self._probe_pallas = (jax.default_backend() == "tpu"
                               and use_pallas is not False)
-        self._probe_runner_last: _LaneRunner | None = None
+        self._probe_runners_last: tuple | None = None
+        # MMA tile prep runs when the graph may be served through the
+        # bit-MMA layout: forced (layout='mma'), or probe-selectable
+        # (layout='auto' with the switching probe on, DESIGN.md §13.4 —
+        # the probe then times the MMA runner and 'auto' adopts its
+        # dense_layout verdict per graph)
+        self._mma_tiles = (layout == "mma"
+                           or (layout == "auto" and switching == "auto"))
         # serve-aware probe (DESIGN.md §11.3): time the engine's own lane
         # runner dense vs policy, not the single-source BucketedBfs proxy
         self.cache = GraphCache(max_bytes=cache_bytes, config=config,
                                 probe=(switching == "auto"), eta=self.eta,
                                 probe_use_pallas=self._probe_pallas,
-                                probe_runner=self._make_probe_runner)
+                                probe_runner=self._make_probe_runner,
+                                mma_tiles=self._mma_tiles)
         self.cache.on_evict(self._drop_runner)
         self._runners: dict[str, _LaneRunner] = {}
         self._queues: OrderedDict[str, deque[BfsQuery]] = OrderedDict()
@@ -1432,36 +1515,64 @@ class BfsEngine:
             self.results[q.rid] = res
 
     # ---- per-graph runners / probe adoption --------------------------------
-    def _make_probe_runner(self, bd: BvssDevice) -> _LaneRunner:
-        r = _LaneRunner(bd, self.kappa, layout=self.layout,
-                        use_pallas=self._probe_pallas)
-        self._probe_runner_last = r
-        return r
+    def _resolve_layout(self, art: GraphArtifacts) -> str:
+        """The layout this graph is actually served with: forced layouts
+        pass through; 'auto' consults the probe's ``dense_layout`` verdict
+        (§13.4) when tiles were probed, else the backend default."""
+        if self.layout != "auto":
+            return self.layout
+        sw = art.switching
+        if (sw is not None and sw.dense_layout == "mma"
+                and art.mma is not None):
+            return "mma"
+        return "packed" if jax.default_backend() == "tpu" else "byteplane"
 
-    def _adopt_probe_runner(self, bd: BvssDevice) -> _LaneRunner | None:
-        """The probe's runner is jit-warm for every per-level shape of this
-        graph; adopt it for serving instead of compiling a twin, when its
-        resolved layout/kernel config matches the engine's."""
-        r, self._probe_runner_last = self._probe_runner_last, None
-        if r is None or r.bd is not bd:
-            return None
-        want_layout = self.layout
-        if want_layout == "auto":
-            want_layout = ("packed" if jax.default_backend() == "tpu"
+    def _make_probe_runner(self, bd: BvssDevice, tiles=None):
+        """Probe-runner factory handed to :class:`GraphCache`: the base
+        runner in the engine's (resolved) layout, plus — when tile prep
+        ran and the layout is probe-selectable 'auto' — the MMA alternate
+        the probe times against it (§13.4).  Returns the pair when the
+        alternate exists, the base runner alone otherwise."""
+        base_layout = self.layout
+        if base_layout == "auto":
+            base_layout = ("packed" if jax.default_backend() == "tpu"
                            else "byteplane")
+        base = _LaneRunner(bd, self.kappa, layout=base_layout,
+                           use_pallas=self._probe_pallas,
+                           mma_tiles=tiles if base_layout == "mma" else None)
+        alt = None
+        if tiles is not None and self.layout == "auto":
+            alt = _LaneRunner(bd, self.kappa, layout="mma",
+                              use_pallas=self._probe_pallas, mma_tiles=tiles)
+        self._probe_runners_last = (base, alt)
+        return (base, alt) if alt is not None else base
+
+    def _adopt_probe_runner(self, bd: BvssDevice,
+                            want_layout: str) -> _LaneRunner | None:
+        """The probe's runners are jit-warm for every per-level shape of
+        this graph; adopt the one matching the resolved layout/kernel
+        config for serving instead of compiling a twin."""
+        made, self._probe_runners_last = self._probe_runners_last, None
+        if made is None:
+            return None
         want_pallas = self.use_pallas
         if want_pallas is None:
             want_pallas = jax.default_backend() == "tpu"
-        if r.layout == want_layout and r.use_pallas == want_pallas:
-            return r
+        for r in made:
+            if (r is not None and r.bd is bd and r.layout == want_layout
+                    and r.use_pallas == want_pallas):
+                return r
         return None
 
-    def _runner_for(self, name: str, bd: BvssDevice) -> _LaneRunner:
+    def _runner_for(self, art: GraphArtifacts) -> _LaneRunner:
+        name, bd = art.name, art.bd
         r = self._runners.get(name)
         if r is None or r.bd is not bd:
-            r = (self._adopt_probe_runner(bd)
-                 or _LaneRunner(bd, self.kappa, layout=self.layout,
-                                use_pallas=self.use_pallas))
+            layout = self._resolve_layout(art)
+            r = (self._adopt_probe_runner(bd, layout)
+                 or _LaneRunner(bd, self.kappa, layout=layout,
+                                use_pallas=self.use_pallas,
+                                mma_tiles=art.mma))
             self._runners[name] = r
         return r
 

@@ -11,6 +11,14 @@ When hypothesis is installed these are the real objects.  When it is not,
 resolution, so the hypothesis-provided argument names never resolve),
 ``settings`` is a no-op decorator factory, and ``st`` is a stub whose
 strategy constructors return inert placeholders.
+
+:func:`given_seeds` is the *degrading* variant for seed-driven properties
+(a test function of one ``seed: int`` argument): with hypothesis it is
+``@settings(max_examples=N) @given(st.integers(...))`` (shrinking, example
+database); without it the test still **runs** — as ``N`` seeded
+pytest-parametrized examples — instead of skipping, so property suites
+keep their coverage on containers without the dev dependency
+(tests/test_kernel_parity.py relies on this).
 """
 from __future__ import annotations
 
@@ -51,3 +59,22 @@ except ModuleNotFoundError:
             return lambda *a, **k: None
 
     st = _StrategyStub()
+
+
+def given_seeds(max_examples: int = 200):
+    """Decorator for a property test taking one ``seed`` argument.
+
+    With hypothesis: ``max_examples`` generated integer seeds with
+    shrinking.  Without: the same count of deterministic seeds via
+    ``pytest.mark.parametrize`` — the suite degrades to seeded examples,
+    never to a skip."""
+    if HAVE_HYPOTHESIS:
+        def decorate(fn):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(st.integers(0, 2**32 - 1))(fn))
+        return decorate
+
+    def decorate(fn):
+        return pytest.mark.parametrize("seed", range(max_examples))(fn)
+
+    return decorate

@@ -1,0 +1,276 @@
+"""Property-based kernel-parity suite (ISSUE 6 satellite; DESIGN.md §13.3).
+
+Every Pallas pull/scatter kernel in the repo has a bit-identical ``jnp``
+reference twin — the PR 4 contract that makes the references usable both
+as CPU fast paths and as oracles.  This suite *generates* that contract:
+each test draws a random graph (empty frontiers, isolated vertices, a
+kappa that is not a multiple of the 32-bit word on the byteplane
+substrate, single-slice and ragged-last-MMA-tile shapes all reachable)
+and asserts kernel == twin bitwise, for the gather, queued, fused,
+scatter, and new binary-MMA kernels on both substrates.
+
+Runs through :mod:`hypothesis_shim`'s ``given_seeds``: with hypothesis
+installed these are real shrinking properties; without it they degrade to
+the same number of seeded examples (never to a skip).  Case count per
+kernel pair defaults to 200 (the ISSUE 6 acceptance bar) and follows
+``REPRO_PARITY_CASES``; ``REPRO_PALLAS_INTERPRET=1`` forces Pallas
+interpret mode even on TPU backends (the CI interpret job sets it so
+kernel regressions surface on CPU-only runners).
+
+Shapes are drawn from a small pool so the jit cache bounds compilation:
+200 cases per pair mostly re-run warm kernels on fresh random content.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from hypothesis_shim import given_seeds
+from repro.core import blest
+from repro.core.bvss import BvssConfig, build_bvss
+from repro.core.graph import Graph
+from repro.core.msbfs_packed import frontier_planes
+from repro.kernels import ops
+from repro.kernels import pull_mma_ms_packed as mma
+from repro.kernels import ref as kref
+from repro.kernels.pull_ms_packed import pull_ms_packed, pull_ms_packed_ref
+from repro.kernels.pull_ms_packed_queued import (
+    pull_ms_packed_queued, pull_ms_packed_queued_ref)
+from repro.kernels.pull_scatter_ms_packed import (
+    pull_scatter_ms_packed, pull_scatter_ms_packed_ref)
+from repro.kernels.scatter_or import scatter_or, scatter_or_ref
+
+CASES = int(os.environ.get("REPRO_PARITY_CASES", "200"))
+INTERPRET = (os.environ.get("REPRO_PALLAS_INTERPRET") == "1"
+             or jax.default_backend() != "tpu")
+
+# (n, sigma, tau) pool — small so jit compiles are bounded, chosen to pin
+# the awkward shapes: single slice set (n < sigma), sigma < 8, tau == 1,
+# and n deliberately not a multiple of sigma * tau (ragged last slice set)
+SHAPES = (
+    (3, 8, 1),
+    (8, 8, 2),
+    (12, 4, 2),
+    (9, 2, 4),
+    (21, 2, 1),
+    (33, 8, 2),
+    (19, 4, 4),
+    (24, 8, 2),
+)
+KAPPAS_PACKED = (32, 64)
+# byteplane lanes are bytes: kappa needs no word alignment — 8 and 48 are
+# deliberately not multiples of the packed layout's 32-bit word
+KAPPAS_BYTE = (8, 32, 48)
+# MMA VSS blocks: blest pads num_vss to a multiple of 8, so block=16
+# forces the ragged-last-tile pad-and-mask path in prep_mma_tiles
+MMA_BLOCKS = (8, 16)
+
+
+def _rand_bd(rng) -> blest.BvssDevice:
+    """Random tiny graph -> device BVSS.  Uniform random edges leave
+    isolated vertices routinely; m == 0 isolates every vertex."""
+    n, sigma, tau = SHAPES[int(rng.integers(len(SHAPES)))]
+    m = int(rng.integers(0, 3 * n + 1))
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    g = Graph(n=n, src=src, dst=dst)
+    return blest.to_device(build_bvss(g, BvssConfig(sigma=sigma, tau=tau)))
+
+
+def _rand_packed(rng, bd, kappa: int):
+    """Random packed visited words + frontier tiles (empty ~15%)."""
+    kw = kappa // 32
+    if rng.random() < 0.15:
+        fv = np.zeros((bd.n_ext, kw), np.uint32)
+    else:
+        fv = rng.integers(0, 1 << 32, (bd.n_ext, kw),
+                          dtype=np.uint64).astype(np.uint32)
+    v = rng.integers(0, 1 << 32, (bd.n_ext, kw),
+                     dtype=np.uint64).astype(np.uint32)
+    return jnp.asarray(v), frontier_planes(bd, jnp.asarray(fv))
+
+
+def _rand_byte(rng, bd, kappa: int):
+    """Random byteplane frontier tiles in {0,1} (empty ~15%)."""
+    if rng.random() < 0.15:
+        fv = np.zeros((bd.n_ext, kappa), np.uint8)
+    else:
+        fv = rng.integers(0, 2, (bd.n_ext, kappa), dtype=np.uint8)
+    return frontier_planes(bd, jnp.asarray(fv))
+
+
+def _eq(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# packed substrate: gather / queued / scatter / fused
+# ---------------------------------------------------------------------------
+
+
+@given_seeds(CASES)
+def test_pull_ms_packed_parity(seed):
+    rng = np.random.default_rng(seed)
+    bd = _rand_bd(rng)
+    kappa = KAPPAS_PACKED[seed % len(KAPPAS_PACKED)]
+    _, f = _rand_packed(rng, bd, kappa)
+    out = pull_ms_packed(bd.masks, f, bd.v2r, sigma=bd.sigma,
+                         interpret=INTERPRET)
+    _eq(out, pull_ms_packed_ref(bd.masks, f[bd.v2r], sigma=bd.sigma))
+
+
+@given_seeds(CASES)
+def test_pull_ms_packed_queued_parity(seed):
+    rng = np.random.default_rng(seed)
+    bd = _rand_bd(rng)
+    kappa = KAPPAS_PACKED[seed % len(KAPPAS_PACKED)]
+    _, f = _rand_packed(rng, bd, kappa)
+    k = int(rng.integers(0, bd.num_vss + 1))
+    qids = np.full(blest.bucket_size(k), bd.num_vss, np.int32)
+    qids[:k] = rng.choice(bd.num_vss, k, replace=False)
+    qids = jnp.asarray(qids)
+    out = pull_ms_packed_queued(bd.masks, f, bd.v2r, qids, sigma=bd.sigma,
+                                interpret=INTERPRET)
+    _eq(out, pull_ms_packed_queued_ref(bd.masks, f, bd.v2r, qids,
+                                       sigma=bd.sigma))
+
+
+@given_seeds(CASES)
+def test_scatter_or_parity(seed):
+    rng = np.random.default_rng(seed)
+    n_rows = int(rng.integers(1, 40))
+    kw = (1, 2)[seed % 2]
+    t = int(rng.integers(1, 64))
+    dest = jnp.asarray(rng.integers(0, 1 << 32, (n_rows, kw),
+                                    dtype=np.uint64).astype(np.uint32))
+    rows = jnp.asarray(rng.integers(0, n_rows, t).astype(np.int32))
+    marks = jnp.asarray(rng.integers(0, 1 << 32, (t, kw),
+                                     dtype=np.uint64).astype(np.uint32))
+    _eq(scatter_or(dest, rows, marks, interpret=INTERPRET),
+        scatter_or_ref(dest, rows, marks))
+
+
+@given_seeds(CASES)
+def test_pull_scatter_fused_parity(seed):
+    rng = np.random.default_rng(seed)
+    bd = _rand_bd(rng)
+    kappa = KAPPAS_PACKED[seed % len(KAPPAS_PACKED)]
+    v, f = _rand_packed(rng, bd, kappa)
+    rows = bd.row_ids.reshape(-1)
+    out = pull_scatter_ms_packed(v, bd.masks, f, bd.v2r, rows,
+                                 sigma=bd.sigma, interpret=INTERPRET)
+    _eq(out, pull_scatter_ms_packed_ref(v, bd.masks, f, bd.v2r, rows,
+                                        sigma=bd.sigma))
+
+
+# ---------------------------------------------------------------------------
+# packed substrate: binary-MMA pull (blocked + fused), §13
+# ---------------------------------------------------------------------------
+
+
+@given_seeds(CASES)
+def test_pull_mma_parity(seed):
+    """MMA kernel == its twin == the gather reference (three-way): the
+    bit-matrix product is the same function as the selective-OR pull."""
+    rng = np.random.default_rng(seed)
+    bd = _rand_bd(rng)
+    kappa = KAPPAS_PACKED[seed % len(KAPPAS_PACKED)]
+    block = MMA_BLOCKS[(seed // 2) % len(MMA_BLOCKS)]
+    tiles = mma.prep_mma_tiles(bd, block=block)
+    _, f = _rand_packed(rng, bd, kappa)
+    out = mma.pull_mma_ms_packed(tiles.a_planes, f, tiles.v2r,
+                                 sigma=bd.sigma, block=block,
+                                 interpret=INTERPRET)
+    ref = mma.pull_mma_ms_packed_ref(tiles.a_planes, f[tiles.v2r])
+    _eq(out, ref)
+    # cross-twin: over the real (unpadded) VSS prefix the MMA marks are
+    # the gather pull's marks; the pad tiles are all-zero by construction
+    n_q = bd.masks.shape[0]
+    _eq(out[:n_q], pull_ms_packed_ref(bd.masks, f[bd.v2r], sigma=bd.sigma))
+    _eq(out[n_q:], jnp.zeros_like(out[n_q:]))
+
+
+@given_seeds(CASES)
+def test_pull_scatter_mma_parity(seed):
+    """Fused MMA kernel == its scatter-add twin == the fused gather
+    reference: pad tiles contribute zero marks on sentinel rows."""
+    rng = np.random.default_rng(seed)
+    bd = _rand_bd(rng)
+    kappa = KAPPAS_PACKED[seed % len(KAPPAS_PACKED)]
+    block = MMA_BLOCKS[(seed // 2) % len(MMA_BLOCKS)]
+    tiles = mma.prep_mma_tiles(bd, block=block)
+    v, f = _rand_packed(rng, bd, kappa)
+    out = mma.pull_scatter_mma_ms_packed(v, tiles.a_planes, f, tiles.v2r,
+                                         tiles.rows, sigma=bd.sigma,
+                                         interpret=INTERPRET)
+    _eq(out, mma.pull_scatter_mma_ms_packed_ref(v, tiles.a_planes, f,
+                                                tiles.v2r, tiles.rows))
+    _eq(out, pull_scatter_ms_packed_ref(v, bd.masks, f, bd.v2r,
+                                        bd.row_ids.reshape(-1),
+                                        sigma=bd.sigma))
+
+
+def test_pull_mma_rejects_ragged_tiles():
+    """The blocked kernel asserts tile alignment instead of silently
+    truncating a ragged last tile (the pad-and-mask lives in prep)."""
+    import pytest
+
+    rng = np.random.default_rng(0)
+    bd = _rand_bd(rng)
+    tiles = mma.prep_mma_tiles(bd, block=8)
+    _, f = _rand_packed(rng, bd, 32)
+    bad_block = tiles.a_planes.shape[0] + 8  # can never divide n_q_pad
+    with pytest.raises(ValueError, match="pad-and-mask"):
+        mma.pull_mma_ms_packed(tiles.a_planes, f, tiles.v2r,
+                               sigma=bd.sigma, block=bad_block,
+                               interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# byteplane substrate: Pallas pull + MMA popcount fallback vs the jnp ref
+# ---------------------------------------------------------------------------
+
+
+@given_seeds(CASES)
+def test_pull_ms_byteplane_parity(seed):
+    rng = np.random.default_rng(seed)
+    bd = _rand_bd(rng)
+    kappa = KAPPAS_BYTE[seed % len(KAPPAS_BYTE)]
+    f = _rand_byte(rng, bd, kappa)
+    out = ops.pull_ms(bd.masks, f, bd.v2r, sigma=bd.sigma, use_pallas=True,
+                      interpret=INTERPRET)
+    _eq(out, kref.pull_ms_ref(bd.masks, f[bd.v2r]))
+
+
+@given_seeds(CASES)
+def test_pull_mma_byteplane_parity(seed):
+    """§13.3 AND-OR/popcount fallback == the byteplane pull reference,
+    both full-shape and through the slice-compacted nz planes."""
+    rng = np.random.default_rng(seed)
+    bd = _rand_bd(rng)
+    kappa = KAPPAS_BYTE[seed % len(KAPPAS_BYTE)]
+    f = _rand_byte(rng, bd, kappa)
+    a = jnp.asarray(mma.unpack_mask_planes(np.asarray(bd.masks), bd.sigma))
+    ref = kref.pull_ms_ref(bd.masks, f[bd.v2r])
+    _eq(mma.pull_mma_byteplane_ref(a, f[bd.v2r]), ref)
+    # compacted variant (the serve engine's dense path): marks over the
+    # nonzero-mask slots scatter-max into the same visited bytes as the
+    # full-grid reference
+    tiles = mma.prep_mma_tiles(bd)
+    masks_np = np.asarray(bd.masks)
+    nz_vss, nz_slot = np.nonzero(masks_np)
+    nz_parent = jnp.asarray(
+        np.append(np.asarray(bd.v2r)[nz_vss], bd.num_sets).astype(np.int32))
+    nz_rows = jnp.asarray(
+        np.append(np.asarray(bd.row_ids)[nz_vss, nz_slot],
+                  bd.n_pad).astype(np.int32))
+    v0 = jnp.zeros((bd.n_ext, kappa), jnp.uint8)
+    compact = mma.pull_mma_byteplane_ref(tiles.nz_planes[:, None, :],
+                                         f[nz_parent])[:, 0]
+    got = v0.at[nz_rows].max(compact)
+    want = v0.at[bd.row_ids.ravel()].max(
+        ref.reshape(-1, kappa))
+    _eq(got, want)

@@ -1,0 +1,224 @@
+"""MMA pull layout (DESIGN.md §13) through the serving stack: all four
+built-in workload kinds × switching {auto,on,off} × megatick {1,64} on
+``layout='mma'`` verified against the CPU oracle, the packed-substrate
+(Pallas) variant, the GraphCache accounting/eviction of tile-prep aux
+bytes, the pad-and-mask tile-alignment regression on a deliberately
+misaligned ``n``, the layout='auto' probe's ``dense_layout`` verdict,
+and ``PackedMsBfs(kernel='mma')`` equivalence with the gather kernel."""
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core import blest, msbfs_packed, ref_bfs
+from repro.core.bvss import build_bvss
+from repro.core.graph import from_edges
+from repro.data import graphs
+from repro.kernels import pull_mma_ms_packed as mma
+from repro.serve.bfs_engine import BfsEngine, GraphCache
+from repro.serve.workloads import verify_result
+
+UNREACHED = ref_bfs.UNREACHED
+
+KINDS = ["bfs", "closeness", "distance", "reach"]
+# (switching, eta): dense-forced, queued-forced, probe-gated auto —
+# the same policy triple test_service_api.py sweeps on the base layouts
+MODES = [("off", 10.0), ("on", 0.0), ("auto", 10.0)]
+MEGATICKS = [1, 64]
+
+
+def _engine(**kw):
+    kw.setdefault("layout", "mma")
+    kw.setdefault("use_pallas", False)  # byteplane substrate on CPU CI
+    return BfsEngine(**kw)
+
+
+@pytest.fixture(scope="module")
+def duo():
+    """Small-diameter scale-free + high-diameter ring, as in
+    test_service_api.py: megatick windows behave very differently on the
+    two, and the ring's long tail exercises many dense MMA levels."""
+    return {
+        "kron": graphs.make("kron", scale=6, seed=0),
+        "ring": graphs.make("ring", scale=5),
+    }
+
+
+@pytest.fixture(scope="module")
+def oracle(duo):
+    cache = {}
+
+    def get(name, src):
+        if (name, src) not in cache:
+            cache[name, src] = ref_bfs.bfs_levels(duo[name], src)
+        return cache[name, src]
+
+    return get
+
+
+# ------------------------------------------------- kinds x policy matrix --
+@pytest.mark.parametrize("megatick", MEGATICKS)
+@pytest.mark.parametrize("switching,eta", MODES)
+def test_all_kinds_match_oracle_on_mma(duo, oracle, switching, eta, megatick):
+    """Every built-in workload kind, served over the MMA dense path, must
+    be oracle-exact under all three mode policies and both tick shapes."""
+    eng = _engine(kappa=32, switching=switching, eta=eta, megatick=megatick)
+    rng = np.random.default_rng(MEGATICKS.index(megatick) * 8
+                                + KINDS.index("bfs")
+                                + len(switching))
+    tickets = []
+    for name, g in duo.items():
+        eng.register_graph(name, g)
+        for kind in KINDS:
+            for _ in range(2):
+                src = int(rng.integers(0, g.n))
+                target = (int(rng.integers(0, g.n))
+                          if kind == "distance" else None)
+                tickets.append(eng.submit(name, src, kind=kind,
+                                          target=target))
+    results = eng.run()
+    assert len(results) == len(tickets)
+    for t in tickets:
+        q = t.query
+        verify_result(results[int(t)], q, oracle(q.graph, q.source),
+                      unreached=UNREACHED)
+    for name in duo:  # forced layout really resolved to the MMA runner
+        r = eng._runners[name]
+        assert r.layout == "mma" and r._tiles is not None
+
+
+def test_mma_packed_substrate_matches_oracle(duo, oracle):
+    """use_pallas=True routes the MMA layout onto the packed substrate:
+    dense levels run the fused Pallas MMA pull+scatter kernel (interpret
+    mode off-TPU).  Smoke a few queries oracle-exact."""
+    g = graphs.make("kron", scale=5, seed=1)
+    eng = _engine(kappa=32, use_pallas=True, switching="off")
+    eng.register_graph("g", g)
+    tickets = [eng.submit("g", s) for s in (0, 7, g.n - 1)]
+    results = eng.run()
+    r = eng._runners["g"]
+    assert r.layout == "mma" and r.substrate == "packed"
+    for t in tickets:
+        assert_array_equal(results[int(t)].levels,
+                           ref_bfs.bfs_levels(g, t.query.source))
+
+
+# --------------------------------------------------- cache accounting -----
+def test_cache_counts_and_frees_tile_bytes(duo):
+    """Tile-prep aux bytes must be (a) included in the entry's accounted
+    footprint and (b) released when the entry is evicted — the eviction
+    accounting regression from the PR 6 issue."""
+    with_tiles = GraphCache(mma_tiles=True)
+    with_tiles.register("kron", duo["kron"])
+    a = with_tiles.get("kron")
+    assert a.mma is not None and a.mma.nbytes > 0
+    assert a.aux_bytes >= a.mma.nbytes
+
+    without = GraphCache(mma_tiles=False)
+    without.register("kron", duo["kron"])
+    b = without.get("kron")
+    assert b.mma is None
+    # the tile prep is the *only* delta between the two builds
+    assert a.total_bytes == b.total_bytes + a.mma.nbytes
+
+    # budget fits exactly one entry: admitting ring must evict kron and
+    # current_bytes must drop to ring's own footprint — if the evicted
+    # entry's tile bytes leaked, the second admission would double-count
+    c = GraphCache(max_bytes=a.total_bytes, mma_tiles=True)
+    c.register("kron", duo["kron"])
+    c.register("ring", duo["ring"])
+    ak = c.get("kron")
+    assert c.current_bytes == ak.total_bytes
+    ar = c.get("ring")
+    assert c.evictions == 1 and "kron" not in c
+    assert ar.mma is not None
+    assert c.current_bytes == ar.total_bytes
+
+
+def test_forced_base_layouts_skip_tile_prep(duo):
+    """Engines that can never serve the MMA path must not spend cache
+    bytes on tiles (layout forced to a base substrate, switching fixed)."""
+    eng = BfsEngine(layout="byteplane", use_pallas=False, switching="off")
+    eng.register_graph("kron", duo["kron"])
+    eng.submit("kron", 0)
+    eng.run()
+    assert eng.cache.peek("kron").mma is None
+
+
+# ------------------------------------------------ misaligned-n regression --
+@pytest.mark.parametrize("layout", ["mma", "byteplane", "packed"])
+def test_misaligned_n_matches_oracle(layout):
+    """Deliberately misaligned vertex count (prime n, not a multiple of
+    any tile or word width): the dense sweep must pad-and-mask, never
+    assume tile alignment.  Exact oracle equality on every layout."""
+    rng = np.random.default_rng(11)
+    n = 211  # prime: n % 32, n % 8, n % 256 all nonzero
+    m = 6 * n
+    g = from_edges(rng.integers(0, n, m), rng.integers(0, n, m), n=n)
+    eng = BfsEngine(kappa=32, layout=layout, use_pallas=False,
+                    switching="off")
+    eng.register_graph("g", g)
+    tickets = [eng.submit("g", s) for s in (0, 1, n - 1, 97)]
+    results = eng.run()
+    for t in tickets:
+        assert_array_equal(results[int(t)].levels,
+                           ref_bfs.bfs_levels(g, t.query.source))
+
+
+def test_tile_prep_pads_ragged_vss_list():
+    """prep_mma_tiles pad-and-mask: a block size that does not divide the
+    VSS count must yield sentinel-padded tiles the kernel accepts, and
+    the raw kernel must reject un-padded ragged input loudly."""
+    rng = np.random.default_rng(5)
+    n = 37  # num_vss_pad = 8: a multiple of VSS_PAD but not of block=16
+    m = 4 * n
+    g = from_edges(rng.integers(0, n, m), rng.integers(0, n, m), n=n)
+    bd = blest.to_device(build_bvss(g))
+    assert bd.num_vss_pad % 16 != 0  # forces the ragged-pad path
+    tiles = mma.prep_mma_tiles(bd, block=16)
+    n_q = bd.num_vss_pad
+    assert tiles.a_planes.shape[0] % 16 == 0
+    assert tiles.a_planes.shape[0] >= n_q
+    # pad rows are inert: zero planes, sentinel v2r / rows
+    assert (np.asarray(tiles.a_planes[n_q:]) == 0).all()
+    assert (np.asarray(tiles.v2r[n_q:]) == bd.num_sets).all()
+    assert (np.asarray(tiles.rows[n_q * bd.tau:]) == bd.n_pad).all()
+
+
+# ----------------------------------------------------- auto-probe verdict --
+def test_auto_probe_records_mma_verdict(duo, oracle):
+    """layout='auto' + switching='auto' preps tiles, times the MMA runner
+    in the probe, records time_mma / dense_layout, and serves with the
+    winning layout — oracle-exact either way."""
+    eng = BfsEngine(kappa=32, layout="auto", use_pallas=False,
+                    switching="auto")
+    eng.register_graph("kron", duo["kron"])
+    t = eng.submit("kron", 3)
+    results = eng.run()
+    art = eng.cache.peek("kron")
+    assert art.mma is not None
+    assert art.aux_bytes >= art.mma.nbytes
+    sw = art.switching
+    assert sw is not None and sw.proxy == "serve"
+    assert sw.time_mma is not None and sw.time_mma > 0
+    assert sw.dense_layout in ("base", "mma")
+    r = eng._runners["kron"]
+    if sw.dense_layout == "mma":
+        assert r.layout == "mma"
+    else:
+        assert r.layout in ("packed", "byteplane")
+    assert_array_equal(results[int(t)].levels, oracle("kron", 3))
+
+
+# --------------------------------------------- PackedMsBfs kernel switch --
+def test_packed_msbfs_mma_kernel_matches_gather(duo):
+    """The standalone packed MS-BFS driver with kernel='mma' is bitwise
+    identical to the gather kernel across (v, far, reach)."""
+    bd = blest.to_device(build_bvss(duo["kron"]))
+    srcs = np.full(32, -1, np.int32)
+    srcs[:5] = [0, 3, 17, 40, 61]
+    v_g, far_g, reach_g = msbfs_packed.PackedMsBfs(bd).run(srcs)
+    v_m, far_m, reach_m = msbfs_packed.PackedMsBfs(
+        bd, kernel="mma").run(srcs)
+    assert_array_equal(np.asarray(v_g), np.asarray(v_m))
+    assert_array_equal(np.asarray(far_g), np.asarray(far_m))
+    assert_array_equal(np.asarray(reach_g), np.asarray(reach_m))
