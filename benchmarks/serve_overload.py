@@ -1,0 +1,230 @@
+"""Zipf-popularity overload: queue-depth load-shedding vs an unbounded
+queue (DESIGN.md §14.4).
+
+The §14.2 admission caps exist for exactly one scenario: an open-loop
+arrival stream that exceeds service capacity.  Without caps the engine
+is work-conserving but the backlog — and with it every admitted
+request's queue wait — grows without bound for as long as the overload
+lasts: the p99 of a ticket submitted in wave ``w`` is roughly "time
+until the whole accumulated backlog drains", i.e. the length of the
+run.  With a per-graph depth cap the engine *sheds* the excess at
+``submit()`` time instead (terminal ``REJECTED`` tickets, counted per
+graph in ``eng.stats``), so the wait of every ticket it does admit is
+bounded by cap / service-rate regardless of how long the overload
+sustains.
+
+The stream models the serving scenario the paper's Table 7 prices: a
+fleet of graphs with **Zipf-distributed popularity** (exponent
+``ZIPF_EXP``; rank-1 graph takes ~40% of traffic), arrivals in waves of
+``WAVE_REQ`` requests every ``TICKS_PER_WAVE`` pumped ``step()`` calls —
+far past capacity, since one step advances a single session tick.
+Sources are drawn from a small per-graph pool so every completed ticket
+is oracle-checked (bit-exact BFS levels) without the oracle dominating
+the run.  Three configurations share the identical stream:
+
+* ``overload_shed``      — ``max_queue=2*KAPPA``, ``overload='reject'``
+* ``overload_defer``     — same cap, ``overload='defer'`` (work
+  conserved: nothing is lost, the excess waits in the holding queue, so
+  its tail resembles the unbounded run — the row shows what the cap
+  alone buys *without* shedding)
+* ``overload_unbounded`` — no caps (the pre-§14 engine)
+
+Acceptance bar (full size only): the capped/reject run sheds a nonzero
+number of tickets while the unbounded run sheds none, and its
+admitted-ticket p99 beats the unbounded run's — load-shedding, not
+stalling, under overload.  Every completed ticket of every
+configuration is oracle-checked before any row prints, and every
+submitted ticket must end in a terminal state (no lost requests).
+
+    PYTHONPATH=src python -m benchmarks.serve_overload [--tiny] [--json PATH]
+
+``--tiny`` shrinks the fleet and wave count for the CI smoke step; the
+smoke keeps every oracle/terminal-state check but not the latency bars
+(tiny timings are jitter-dominated on shared CI runners).  ``--json
+PATH`` dumps the rows for the CI perf-trajectory artifact
+(``BENCH_serve_overload.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import ref_bfs
+from repro.data import graphs
+
+from benchmarks import common
+
+KAPPA = 32
+REPEATS = 3
+EDGE_FACTOR = 8
+ZIPF_EXP = 1.1
+SRC_POOL = 8        # sources per graph (bounds the oracle table)
+TICKS_PER_WAVE = 2  # far below per-wave service demand: sustained overload
+MAX_QUEUE = 2 * KAPPA
+
+
+def _zipf_probs(k: int) -> np.ndarray:
+    p = 1.0 / np.power(np.arange(1, k + 1, dtype=np.float64), ZIPF_EXP)
+    return p / p.sum()
+
+
+def make_waves(names, pools, n_waves: int, wave_req: int, seed: int = 0):
+    """The shared arrival stream: ``n_waves`` waves of ``wave_req``
+    (graph, source) pairs, graphs Zipf-popular by rank, sources uniform
+    over each graph's pool."""
+    rng = np.random.default_rng(seed)
+    probs = _zipf_probs(len(names))
+    waves = []
+    for _ in range(n_waves):
+        fams = rng.choice(len(names), size=wave_req, p=probs)
+        waves.append([(names[int(f)], int(rng.choice(pools[names[int(f)]])))
+                      for f in fams])
+    return waves
+
+
+def _serve_stream(eng, waves):
+    """Pump the open-loop stream (cf. serve_fairness._serve_stream) and
+    return (tickets, seconds, shed-count delta).  Every submitted ticket
+    is returned — terminal-state accounting is the caller's."""
+    from repro.serve.bfs_engine import TicketState
+
+    tickets = []
+    shed_before = eng.stats["rejected"]
+    t0 = time.perf_counter()
+    for wave in waves:
+        for fam, src in wave:
+            tickets.append(eng.submit(fam, src))
+        for _ in range(TICKS_PER_WAVE):
+            eng.step()
+    eng.run()
+    dt = time.perf_counter() - t0
+    for t in tickets:
+        assert t.state in TicketState.TERMINAL, \
+            f"ticket {int(t)} not terminal after drain: {t.state}"
+    return tickets, dt, eng.stats["rejected"] - shed_before
+
+
+def run_configs(configs, fleet, waves, oracle) -> dict:
+    from repro.serve.bfs_engine import BfsEngine, TicketState
+
+    engines = {}
+    for label, kw in configs:
+        eng = BfsEngine(kappa=KAPPA, reorder="natural", switching="off",
+                        **kw)
+        for fam, g in fleet.items():
+            eng.register_graph(fam, g)
+        _serve_stream(eng, waves[:1])  # warmup: artifact builds + jit
+        engines[label] = eng
+    samples = {label: [] for label, _ in configs}
+    for _ in range(REPEATS):
+        for label, _ in configs:
+            tickets, dt, shed = _serve_stream(engines[label], waves)
+            done = [t for t in tickets if t.state == TicketState.DONE]
+            for t in done:
+                r = t.result(wait=False)
+                assert (r.levels == oracle[(r.graph, r.source)]).all(), \
+                    f"{label}: diverged from oracle at {r.graph}/{r.source}"
+            assert len(done) + shed == len(tickets), \
+                f"{label}: {len(tickets) - len(done) - shed} tickets lost"
+            samples[label].append((done, dt, shed, len(tickets)))
+    rows = {}
+    for label, _ in configs:
+        done, dt, shed, n_sub = min(
+            samples[label],
+            key=lambda s: np.percentile([t.latency for t in s[0]], 99))
+        lat = np.array([t.latency for t in done])
+        rows[label] = {
+            "label": label, "seconds": dt,
+            "submitted": n_sub, "completed": len(done), "shed": shed,
+            "p50_ms": float(np.percentile(lat, 50)) * 1e3,
+            "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+            "qps": len(done) / dt}
+    return rows
+
+
+def main(argv=()):
+    # argv defaults to () — benchmarks.run calls main() with the harness's
+    # own flags still in sys.argv; only the __main__ path forwards them
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small fleet, few waves")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump rows as JSON (CI perf-trajectory artifact)")
+    args = ap.parse_args(list(argv))
+
+    scale = 6 if args.tiny else 8
+    n_graphs = 4 if args.tiny else 6
+    n_waves = 3 if args.tiny else 10
+    wave_req = 24 if args.tiny else 96
+    max_queue = 16 if args.tiny else MAX_QUEUE
+
+    fleet = {f"g{i}": graphs.rmat(scale, edge_factor=EDGE_FACTOR, seed=i)
+             for i in range(n_graphs)}
+    rng = np.random.default_rng(1)
+    pools = {fam: rng.integers(0, g.n, SRC_POOL)
+             for fam, g in fleet.items()}
+    waves = make_waves(list(fleet), pools, n_waves, wave_req)
+    oracle = {(fam, int(s)): ref_bfs.bfs_levels(fleet[fam], int(s))
+              for fam, pool in pools.items() for s in pool}
+
+    configs = [
+        ("overload_shed",
+         {"max_queue": max_queue, "overload": "reject"}),
+        ("overload_defer",
+         {"max_queue": max_queue, "overload": "defer"}),
+        ("overload_unbounded", {}),
+    ]
+    rows = run_configs(configs, fleet, waves, oracle)
+
+    for label, row in rows.items():
+        print(common.csv_row(
+            label, row["seconds"] / row["submitted"] * 1e6,
+            f"completed={row['completed']}/{row['submitted']} "
+            f"shed={row['shed']} p50_ms={row['p50_ms']:.1f} "
+            f"p99_ms={row['p99_ms']:.1f} qps={row['qps']:.0f}"))
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"kappa": KAPPA, "scale": scale,
+                       "graphs": n_graphs, "waves": n_waves,
+                       "wave_req": wave_req, "max_queue": max_queue,
+                       "zipf_exp": ZIPF_EXP, "tiny": args.tiny,
+                       "rows": list(rows.values())}, fh, indent=2)
+        print(f"# wrote {args.json}")
+
+    # acceptance (full size only).  --tiny is a *smoke*: tiny timings are
+    # jitter-dominated on shared CI runners, so the tiny run keeps the
+    # oracle/terminal-state checks but not the latency bars.
+    if args.tiny:
+        return
+    shed = rows["overload_shed"]
+    unbounded = rows["overload_unbounded"]
+    defer = rows["overload_defer"]
+    if shed["shed"] == 0:
+        raise AssertionError(
+            f"the capped engine shed nothing at max_queue={MAX_QUEUE} "
+            f"under a {wave_req}-per-{TICKS_PER_WAVE}-tick arrival "
+            f"stream — the overload is not past capacity")
+    if unbounded["shed"] or defer["shed"]:
+        raise AssertionError(
+            f"uncapped/defer configurations shed "
+            f"({unbounded['shed']}/{defer['shed']}) — rejects must come "
+            f"from the §14.2 policy alone")
+    if defer["completed"] != defer["submitted"]:
+        raise AssertionError(
+            f"defer lost work: {defer['completed']}/{defer['submitted']}")
+    if shed["p99_ms"] >= unbounded["p99_ms"]:
+        raise AssertionError(
+            f"admitted-ticket p99 under load-shedding "
+            f"({shed['p99_ms']:.1f}ms) did not beat the unbounded queue "
+            f"({unbounded['p99_ms']:.1f}ms) — the cap is not bounding "
+            f"the tail")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

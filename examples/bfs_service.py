@@ -59,6 +59,13 @@ def main():
     # join their graph's active session mid-flight, §12.1).
     for i in range(64):
         submit_one(i)
+    # Artifact builds run on a background thread (DESIGN.md §14.3), so
+    # the submits above returned immediately with BUILDING tickets.
+    # Let both artifacts land before pumping so the two sessions open
+    # together and the round-robin interleave shows from the first tick.
+    while eng.cache.building:
+        eng.cache.wait_builds()
+        eng.cache.poll_builds()
     served = 0
     late = 64
     while eng.has_work():

@@ -34,6 +34,14 @@ with ``--switching on`` forces queued sweeps every level.
 per device dispatch inside a ``lax.while_loop`` — the fused on-device
 traversal; ``1`` (default) is the per-level engine.  The reported
 ``host syncs/level`` drops below 1 once windows cover multiple levels.
+
+``--builders``/``--max-queue``/``--max-queue-total``/``--overload``
+surface the §14 hardening knobs: artifact builds run on a background
+pool (``--builders 0`` restores the legacy synchronous build) and
+queue-depth caps shed load — rejected tickets are counted and reported
+(and excluded from the latency percentiles, which cover admitted
+requests only).  ``benchmarks/serve_overload.py`` measures the p99 this
+buys under Zipf overload.
 """
 from __future__ import annotations
 
@@ -82,6 +90,20 @@ def main():
     ap.add_argument("--megatick", type=int, default=1,
                     help="fused dense levels per device dispatch "
                          "(DESIGN.md §11); 1 = per-level engine")
+    ap.add_argument("--builders", type=int, default=1,
+                    help="background artifact-build threads (DESIGN.md "
+                         "§14.3); 0 = legacy synchronous builds")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="per-graph queue-depth cap (§14.2); default "
+                         "unbounded")
+    ap.add_argument("--max-queue-total", type=int, default=None,
+                    help="engine-wide queue-depth cap (§14.2); default "
+                         "unbounded")
+    ap.add_argument("--overload", default="reject",
+                    choices=["reject", "defer"],
+                    help="over-cap policy (§14.2): reject sheds with a "
+                         "REJECTED ticket, defer parks the request until "
+                         "capacity frees")
     ap.add_argument("--verify", action="store_true",
                     help="check every result against the CPU oracle")
     args = ap.parse_args()
@@ -89,7 +111,7 @@ def main():
     from repro.core import ref_bfs
     from repro.core.switching import ETA_DEFAULT
     from repro.data import graphs
-    from repro.serve.bfs_engine import BfsEngine
+    from repro.serve.bfs_engine import BfsEngine, TicketState
 
     if args.kappa <= 0 or args.kappa % 32:
         ap.error(f"--kappa must be a positive multiple of 32, got {args.kappa}")
@@ -108,10 +130,16 @@ def main():
     rng = np.random.default_rng(args.seed)
     cache_bytes = (int(args.cache_mb * (1 << 20))
                    if args.cache_mb is not None else None)
+    if args.builders < 0:
+        ap.error(f"--builders must be >= 0, got {args.builders}")
     eng = BfsEngine(kappa=args.kappa, cache_bytes=cache_bytes,
                     layout=args.layout, scheduler=args.scheduler,
                     switching=args.switching,
-                    eta=args.eta, megatick=args.megatick)
+                    eta=args.eta, megatick=args.megatick,
+                    build_workers=args.builders,
+                    max_queue=args.max_queue,
+                    max_queue_total=args.max_queue_total,
+                    overload=args.overload)
 
     kinds = [k.strip() for k in args.kinds.split(",") if k.strip()]
     bad = [k for k in kinds if k not in eng.workload_kinds]
@@ -149,12 +177,20 @@ def main():
     mix = " ".join(f"{k}={v}" for k, v in by_kind.items() if v)
     print(f"served {len(results)} queries ({mix}) in {dt:.2f}s "
           f"({len(results) / dt:.1f} qps)")
+    shed = sum(1 for t in tickets if t.state == TicketState.REJECTED)
+    failed = sum(1 for t in tickets if t.state == TicketState.FAILED)
+    if shed or failed:
+        print(f"shed {shed} (overload={args.overload}) failed {failed} "
+              f"of {len(tickets)} submitted (§14.2)")
     # per-request latency from the tickets' timestamps (§12.1): submission
-    # to extraction, so it includes queue wait under backlog
-    lat = np.array([t.latency for t in tickets])
-    print(f"latency p50={np.percentile(lat, 50) * 1e3:.1f}ms "
-          f"p99={np.percentile(lat, 99) * 1e3:.1f}ms "
-          f"max={lat.max() * 1e3:.1f}ms (scheduler={args.scheduler})")
+    # to extraction, so it includes queue wait under backlog; admitted
+    # (DONE) requests only — shed tickets never entered a lane
+    lat = np.array([t.latency for t in tickets
+                    if t.state == TicketState.DONE])
+    if lat.size:
+        print(f"latency p50={np.percentile(lat, 50) * 1e3:.1f}ms "
+              f"p99={np.percentile(lat, 99) * 1e3:.1f}ms "
+              f"max={lat.max() * 1e3:.1f}ms (scheduler={args.scheduler})")
     s = eng.stats
     print(f"batches={s['batches']} ticks={s['ticks']} levels={s['levels']} "
           f"(dense={s['levels_dense']} queued={s['levels_queued']}) "
@@ -188,12 +224,15 @@ def main():
               f"scale_free={art.reorder.scale_free} switching: {verdict}")
     c = eng.cache
     print(f"cache: {len(c)} resident ({c.current_bytes / (1 << 20):.2f} MiB) "
-          f"hits={c.hits} misses={c.misses} evictions={c.evictions}")
+          f"hits={c.hits} misses={c.misses} evictions={c.evictions} "
+          f"builds={s['builds']} build_failures={s['build_failures']}")
 
     if args.verify:
         from repro.serve.workloads import verify_result
 
         for t in tickets:
+            if t.state != TicketState.DONE:
+                continue
             q = t.query
             verify_result(results[int(t)], q,
                           ref_bfs.bfs_levels(fleet[q.graph], q.source),

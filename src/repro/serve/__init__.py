@@ -9,6 +9,10 @@ round-robin scheduler over resumable per-graph sessions (many graphs in
 flight at once — no cross-graph head-of-line blocking), and what a lane
 computes is a :class:`~repro.serve.workloads.Workload` plugin
 (``workloads`` module: ``bfs``/``closeness``/``distance``/``reach``
-built in, ``register`` for more).  ``serve_loop`` is the LM decode
-continuous-batching engine the graph engine's slot-refill design
-mirrors."""
+built in, ``register`` for more).  The service is hardened for
+open-loop overload (§14): artifact builds run on a background pool
+(tickets wait in ``BUILDING``; build failures become per-ticket
+``FAILED`` results), queue-depth caps shed load (``REJECTED``/deferred
+tickets) and per-tenant weights share lane admission.  ``serve_loop``
+is the LM decode continuous-batching engine the graph engine's
+slot-refill design mirrors."""

@@ -117,6 +117,28 @@ plugin (§12.3): ``bfs`` and ``closeness`` are plugins now, joined by
 target's bit lights up) and ``reach`` (count only, no level-array
 transfer); ``BfsEngine.register_workload`` adds more.
 
+Service hardening (DESIGN.md §14)
+---------------------------------
+Tickets carry an explicit lifecycle (``QUEUED ⇄ BUILDING → RUNNING →
+DONE | REJECTED | FAILED``, §14.1) and the engine never blocks a
+``step()`` on artifact construction: a cache-miss graph's build
+(reorder + BVSS + probe, the Table 7 preprocessing cost) runs on
+:class:`GraphCache`'s bounded background builder pool (§14.3), its
+tickets sit in ``BUILDING``, and the session opens only once the
+artifact lands — a slow or *failing* build never stalls another
+graph's tick; build exceptions surface as per-ticket ``FAILED``
+results instead of crashing the engine.  Admission is a policy
+(§14.2): per-graph and global queue-depth caps shed load at
+``submit()`` time (``overload='reject'`` → ``REJECTED`` tickets,
+``'defer'`` → a holding queue promoted as capacity frees), and
+per-tenant weights (``tenant_weights=``) give the per-graph queues
+weighted-round-robin admission across tenants so a heavy tenant
+cannot starve a light one of lane slots.  Timestamps come from an
+injectable clock (``BfsEngine(clock=)``), so latency/SLO accounting
+is testable without sleeps; ``benchmarks/serve_overload.py`` drives
+the engine past capacity with Zipf-popularity traffic and measures
+the p99 a capped queue buys.
+
 Megatick traversal (DESIGN.md §11)
 ----------------------------------
 ``BfsEngine(megatick=T)`` with ``T > 1`` moves the per-graph level loop
@@ -143,6 +165,8 @@ import functools
 import itertools
 import time
 from collections import OrderedDict, deque
+from concurrent.futures import (
+    FIRST_COMPLETED, ThreadPoolExecutor, wait as _futures_wait)
 from typing import NamedTuple
 
 import jax
@@ -171,11 +195,48 @@ from repro.serve.workloads import (  # re-exported: the request/result
 SWITCHING_MODES = ("auto", "on", "off")
 SCHEDULERS = ("rr", "serial")
 LAYOUTS = ("auto", "packed", "byteplane", "mma")
+OVERLOAD_POLICIES = ("reject", "defer")
 
 
 # ---------------------------------------------------------------------------
 # Tickets (requests/results live in serve/workloads.py, re-exported above)
 # ---------------------------------------------------------------------------
+
+
+class TicketState:
+    """Ticket lifecycle (DESIGN.md §14.1)::
+
+        QUEUED ⇄ BUILDING → RUNNING → DONE
+           ↓                             (terminal)
+        REJECTED / FAILED (terminal)
+
+    ``QUEUED`` waits for a lane with the artifact resident; ``BUILDING``
+    waits for the graph's background artifact build — the two swap
+    whenever the artifact is evicted (build rescheduled) or lands (back
+    to the lane queue).  ``RUNNING`` is seeded into a lane.  Terminal:
+    ``DONE`` (result extracted), ``REJECTED`` (shed at submission by the
+    §14.2 admission policy), ``FAILED`` (the artifact build raised;
+    ``ticket.error`` carries the cause)."""
+
+    QUEUED = "QUEUED"
+    BUILDING = "BUILDING"
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    REJECTED = "REJECTED"
+    FAILED = "FAILED"
+    TERMINAL = frozenset({DONE, REJECTED, FAILED})
+
+
+class TicketError(RuntimeError):
+    """Base class of the terminal-failure errors ``Ticket.result`` raises."""
+
+
+class TicketRejected(TicketError):
+    """``result()`` of a ticket shed by admission control (§14.2)."""
+
+
+class TicketFailed(TicketError):
+    """``result()`` of a ticket whose graph's artifact build failed (§14.3)."""
 
 
 class Ticket(int):
@@ -184,13 +245,20 @@ class Ticket(int):
     keeps working — that doubles as a non-blocking completion handle
     (DESIGN.md §12.1).
 
-    ``done()`` is an O(1) host check; ``result()`` returns the
-    :class:`BfsResult` (by default pumping ``engine.step()`` until this
-    request completes — ``wait=False`` raises instead of pumping).
-    Timestamps (``time.monotonic()`` seconds) support latency accounting:
-    ``submitted_at`` is stamped at submission, ``admitted_at`` when the
-    request is seeded into a lane (``queue_wait`` = admitted − submitted),
-    ``completed_at`` at extraction (``latency`` = completed − submitted).
+    ``done()`` is an O(1) host check (any terminal §14.1 state);
+    ``result()`` returns the :class:`BfsResult` (by default pumping
+    ``engine.step()`` until this request reaches a terminal state —
+    ``wait=False`` raises instead of pumping), or raises
+    :class:`TicketRejected` / :class:`TicketFailed` for requests that
+    terminated without a result.  ``state`` is the current §14.1
+    lifecycle state; ``error`` the human-readable cause of a
+    ``REJECTED``/``FAILED`` terminal.  Timestamps (engine-clock seconds,
+    ``time.monotonic`` unless ``BfsEngine(clock=)`` injects a fake)
+    support latency accounting: ``submitted_at`` is stamped at
+    submission, ``admitted_at`` when the request is seeded into a lane
+    (``queue_wait`` = admitted − submitted), ``completed_at`` at
+    extraction — or rejection/failure — (``latency`` = completed −
+    submitted).
 
     The engine holds the ticket only while the request is pending; once
     completed, the result lives on the ticket alone, so result lifetime is
@@ -199,6 +267,8 @@ class Ticket(int):
 
     _engine: "BfsEngine"
     query: BfsQuery
+    state: str
+    error: str | None
     submitted_at: float
     admitted_at: float | None
     completed_at: float | None
@@ -208,34 +278,48 @@ class Ticket(int):
         t = super().__new__(cls, rid)
         t._engine = engine
         t.query = query
-        t.submitted_at = time.monotonic()
+        t.state = TicketState.QUEUED
+        t.error = None
+        t.submitted_at = engine._clock()
         t.admitted_at = None
         t.completed_at = None
         t._result = None
         return t
 
     def done(self) -> bool:
-        return self._result is not None
+        return self.state in TicketState.TERMINAL
 
     def result(self, *, wait: bool = True) -> BfsResult:
         """The finished :class:`BfsResult`.  ``wait=True`` (default) pumps
-        ``engine.step()`` until this request completes; ``wait=False``
-        raises RuntimeError when it has not completed yet.
+        ``engine.step()`` until this request reaches a terminal state;
+        ``wait=False`` raises RuntimeError when it has not completed yet.
+        A ticket shed by admission control raises :class:`TicketRejected`;
+        one whose graph's artifact build failed raises
+        :class:`TicketFailed` — in both cases regardless of ``wait``.
 
         Other requests completing during the pump are re-queued onto the
         engine's completion stream (only this ticket's own notification
         is consumed), so a surrounding ``step()``/``run()`` loop still
         sees every completion exactly once."""
-        if self._result is None and wait:
+        if not self.done() and wait:
             eng = self._engine
             # foreign completions are parked locally during the pump (a
             # step()-returned ticket fed straight back into eng._completed
             # would be drained and re-parked on every remaining iteration)
             # and re-queued in one batch when the pump ends
             others: list[Ticket] = []
-            while self._result is None and eng.has_work():
-                others.extend(t for t in eng.step() if t is not self)
+            while not self.done() and eng.has_work():
+                stepped = eng.step()
+                others.extend(t for t in stepped if t is not self)
+                if not stepped:
+                    eng._idle_wait()
             eng._completed.extend(others)
+        if self.state == TicketState.REJECTED:
+            raise TicketRejected(
+                self.error or f"request {int(self)} was shed")
+        if self.state == TicketState.FAILED:
+            raise TicketFailed(
+                self.error or f"request {int(self)} failed")
         if self._result is None:
             raise RuntimeError(f"request {int(self)} has not completed"
                                + ("" if wait else " (wait=False)"))
@@ -360,7 +444,18 @@ class GraphCache:
     byte budget holds.  The entry being returned is never evicted, so a
     budget smaller than a single graph still serves (with rebuild churn,
     visible in ``stats``).
-    """
+
+    Builds can also run **asynchronously** (DESIGN.md §14.3):
+    ``start_build`` schedules :func:`build_artifacts` on a bounded
+    background pool (at most ``builders`` threads; further builds queue
+    behind them) and ``poll_builds`` — called from the owner's thread —
+    installs finished artifacts and reports failures.  The split keeps
+    the threading contract trivial: worker threads only ever read the
+    immutable ``_specs``; every ``_entries``/stats mutation happens on
+    the polling thread.  ``fault_hook`` (a ``fn(name)`` called at the
+    top of every build, sync or async) is the §14.3 fault-injection
+    point — raising from it fails the build exactly like a real
+    preprocessing error."""
 
     def __init__(self, max_bytes: int | None = None,
                  config: BvssConfig | None = None, *,
@@ -368,7 +463,11 @@ class GraphCache:
                  eta: float = switching_mod.ETA_DEFAULT,
                  probe_use_pallas: bool = False,
                  probe_runner=None,
-                 mma_tiles: bool = False):
+                 mma_tiles: bool = False,
+                 builders: int = 1,
+                 fault_hook=None):
+        if builders < 1:
+            raise ValueError(f"builders must be >= 1, got {builders}")
         self.max_bytes = max_bytes
         self.config = config or BvssConfig()
         self.probe = probe
@@ -376,12 +475,19 @@ class GraphCache:
         self.probe_use_pallas = probe_use_pallas
         self.probe_runner = probe_runner
         self.mma_tiles = mma_tiles
+        self.builders = int(builders)
+        self.fault_hook = fault_hook
         self._specs: dict[str, tuple[Graph, str | None]] = {}
         self._entries: OrderedDict[str, GraphArtifacts] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self._evict_listeners: list = []
+        # in-flight background builds: name -> Future[GraphArtifacts].
+        # The executor is created lazily and torn down whenever the build
+        # set drains, so idle engines hold no threads.
+        self._builds: dict = {}
+        self._executor: ThreadPoolExecutor | None = None
 
     def register(self, name: str, graph: Graph, *,
                  reorder: str | None = None) -> None:
@@ -427,17 +533,110 @@ class GraphCache:
             return self._entries[name]
         if name not in self._specs:
             raise KeyError(f"graph {name!r} not registered")
+        if name in self._builds:
+            # a synchronous build here would race the worker and install
+            # the artifact twice; callers using the async path must
+            # poll_builds()/wait_builds() until the in-flight build lands
+            raise RuntimeError(
+                f"artifact build for {name!r} is in flight on the "
+                f"background builder; poll_builds() until it lands")
         self.misses += 1
+        art = self._build(name)
+        self._install(name, art)
+        return art
+
+    def _build(self, name: str) -> GraphArtifacts:
+        """One artifact build (fault hook, then the real preprocessing) —
+        shared verbatim by the sync ``get`` path and the §14.3 worker
+        threads, which only ever read ``_specs`` (immutable after
+        ``register``)."""
+        if self.fault_hook is not None:
+            self.fault_hook(name)
         g, reorder = self._specs[name]
-        art = build_artifacts(name, g, reorder=reorder, config=self.config,
-                              probe=self.probe, eta=self.eta,
-                              probe_use_pallas=self.probe_use_pallas,
-                              probe_runner=self.probe_runner,
-                              mma_tiles=self.mma_tiles)
+        return build_artifacts(name, g, reorder=reorder, config=self.config,
+                               probe=self.probe, eta=self.eta,
+                               probe_use_pallas=self.probe_use_pallas,
+                               probe_runner=self.probe_runner,
+                               mma_tiles=self.mma_tiles)
+
+    def _install(self, name: str, art: GraphArtifacts) -> None:
         self._entries[name] = art
         self._entries.move_to_end(name)
         self._shrink()
-        return art
+
+    # ---- background builds (DESIGN.md §14.3) ------------------------------
+    def start_build(self, name: str) -> None:
+        """Schedule ``name``'s artifact build on the background pool
+        (bounded at ``builders`` threads; excess builds queue behind
+        them).  No-op when the entry is resident or its build is already
+        in flight.  Counts a miss — the build *is* the miss work, moved
+        off-thread; installation into the LRU happens on the polling
+        thread at the next :meth:`poll_builds`."""
+        if name in self._entries or name in self._builds:
+            return
+        if name not in self._specs:
+            raise KeyError(f"graph {name!r} not registered")
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=self.builders, thread_name_prefix="artifact-build")
+        self.misses += 1
+        self._builds[name] = self._executor.submit(self._build, name)
+
+    def poll_builds(self) -> list:
+        """Collect finished background builds without blocking: install
+        each success into the LRU (move-to-end + shrink, exactly like a
+        sync miss) and return ``[(name, art_or_None, exc_or_None), ...]``
+        for every build that finished since the last poll.  The artifact
+        is returned *alongside* installation because a same-poll
+        neighbour's install may immediately evict it (§14.3's
+        pin-during-build) — the caller holds the reference, not the LRU."""
+        finished = [n for n, f in self._builds.items() if f.done()]
+        out = []
+        for name in finished:
+            fut = self._builds.pop(name)
+            exc = fut.exception()
+            art = None
+            if exc is None:
+                art = fut.result()
+                self._install(name, art)
+            out.append((name, art, exc))
+        if not self._builds and self._executor is not None:
+            # build set drained: drop the pool so a fleet of engines in
+            # one process doesn't accumulate idle threads; the next
+            # start_build lazily re-creates it
+            self._executor.shutdown(wait=False)
+            self._executor = None
+        return out
+
+    def wait_builds(self, timeout: float | None = None) -> bool:
+        """Block until at least one in-flight build finishes (or
+        ``timeout`` seconds elapse); False when none was in flight.
+        Completions still need a :meth:`poll_builds` to install — this is
+        the bounded sleep ``run()``-style drain loops use instead of
+        spinning (``step()`` itself never calls it)."""
+        if not self._builds:
+            return False
+        _futures_wait(list(self._builds.values()), timeout=timeout,
+                      return_when=FIRST_COMPLETED)
+        return True
+
+    @property
+    def building(self) -> list[str]:
+        """Names whose artifact build is in flight on the background pool."""
+        return list(self._builds)
+
+    def build_in_flight(self, name: str) -> bool:
+        return name in self._builds
+
+    def evict(self, name: str) -> bool:
+        """Force ``name`` out of the cache now (listeners fire, the
+        eviction is counted); False when not resident.  Sessions serving
+        the graph keep their pinned artifact reference (§12.2) — this
+        only makes the next cold lookup rebuild."""
+        if name not in self._entries:
+            return False
+        self._evict_entry(name)
+        return True
 
     def _shrink(self) -> None:
         """Evict LRU entries until the budget holds.  The entry `get` is
@@ -447,10 +646,87 @@ class GraphCache:
             return
         while self.current_bytes > self.max_bytes and len(self._entries) > 1:
             victim, _ = next(iter(self._entries.items()))
-            self._entries.pop(victim)
-            self.evictions += 1
-            for fn in self._evict_listeners:
-                fn(victim)
+            self._evict_entry(victim)
+
+    def _evict_entry(self, victim: str) -> None:
+        self._entries.pop(victim)
+        self.evictions += 1
+        for fn in self._evict_listeners:
+            fn(victim)
+
+
+# ---------------------------------------------------------------------------
+# Per-graph admission queues: FIFO within a tenant, weighted across them
+# ---------------------------------------------------------------------------
+
+
+class _TenantQueue:
+    """One graph's admission queue (DESIGN.md §14.2): FIFO within a
+    tenant, weighted round-robin *across* tenants at lane-refill time.
+
+    Every query carries a ``tenant`` key (``"default"`` unless the
+    caller sets one), so with a single tenant this degenerates to the
+    plain FIFO deque the engine used before — same pop order, same
+    ``len``/iteration surface.  With several, a tenant of weight ``k``
+    (``BfsEngine(tenant_weights={...})``, default 1) is offered ``k``
+    consecutive dequeues per rotation while it has queued work: free
+    lanes are shared by weight, and a tenant flooding one graph's queue
+    cannot starve another tenant's requests on that graph of lane slots.
+    Tenants leave the rotation when drained and re-enter on their next
+    append, so idle tenants cost nothing."""
+
+    __slots__ = ("_weights", "_by_tenant", "_rotation", "_credit", "_len")
+
+    def __init__(self, weights: dict[str, int] | None = None):
+        self._weights = weights or {}
+        self._by_tenant: OrderedDict[str, deque] = OrderedDict()
+        self._rotation: deque[str] = deque()
+        self._credit = 0
+        self._len = 0
+
+    def _weight(self, tenant: str) -> int:
+        return int(self._weights.get(tenant, 1))
+
+    def append(self, q: BfsQuery) -> None:
+        d = self._by_tenant.get(q.tenant)
+        if d is None:
+            d = self._by_tenant[q.tenant] = deque()
+            self._rotation.append(q.tenant)
+            if len(self._rotation) == 1:
+                self._credit = self._weight(q.tenant)
+        d.append(q)
+        self._len += 1
+
+    def popleft(self) -> BfsQuery:
+        if not self._len:
+            raise IndexError("pop from an empty _TenantQueue")
+        rot = self._rotation
+        while True:
+            tenant = rot[0]
+            d = self._by_tenant[tenant]
+            if not d:
+                # drained tenant retires from the rotation (it re-enters
+                # on its next append); the new head starts a fresh quantum
+                rot.popleft()
+                del self._by_tenant[tenant]
+                self._credit = self._weight(rot[0]) if rot else 0
+                continue
+            if self._credit <= 0:
+                rot.rotate(-1)
+                self._credit = self._weight(rot[0])
+                continue
+            self._credit -= 1
+            self._len -= 1
+            return d.popleft()
+
+    def __len__(self) -> int:
+        return self._len
+
+    def __bool__(self) -> bool:
+        return self._len > 0
+
+    def __iter__(self):
+        return itertools.chain.from_iterable(self._by_tenant.values())
 
 
 # ---------------------------------------------------------------------------
@@ -928,15 +1204,19 @@ class _GraphSession:
 
     The session pins ``art``/``runner`` for its lifetime, so a graph
     evicted from the cache mid-service keeps serving correctly: the cache
-    drops the entry (and a *re-opened* session will rebuild it) but
-    in-flight lanes never see the substrate swap out from under them.
+    drops the entry (and a *re-opened* session will schedule a rebuild)
+    but in-flight lanes never see the substrate swap out from under them.
+    The artifact arrives prebuilt from the engine (resident cache entry,
+    or the §14.3 held reference when eviction raced the build landing) —
+    a session never builds anything itself, so opening one is always
+    cheap and ``step()`` stays non-blocking.
     """
 
-    def __init__(self, engine: "BfsEngine", name: str, queue: deque):
+    def __init__(self, engine: "BfsEngine", name: str,
+                 queue: "_TenantQueue", art: GraphArtifacts):
         self.engine = engine
         self.name = name
         self.queue = queue
-        art = engine.cache.get(name)
         self.art = art
         self.runner = engine._runner_for(art)
         kappa = engine.kappa
@@ -991,7 +1271,7 @@ class _GraphSession:
             self.watch_dev = None
             clear = np.zeros(kappa, bool)
             new_src = np.full(kappa, -1, np.int32)
-            now = time.monotonic()
+            now = eng._clock()
             for i in free:
                 if not queue:
                     break
@@ -1255,6 +1535,22 @@ class BfsEngine:
     What a lane computes is a :class:`repro.serve.workloads.Workload`
     plugin (§12.3): ``bfs``/``closeness``/``distance``/``reach`` by
     default, ``register_workload`` for more.
+
+    Overload behaviour (§14): a cache-miss graph's artifact builds on a
+    background pool (``build_workers``; ``0`` restores the legacy
+    synchronous build on the submitting thread), so ``submit()`` and
+    ``step()`` never block on preprocessing and a failed build yields
+    per-ticket ``FAILED`` results instead of an engine crash.
+    ``max_queue`` / ``max_queue_total`` cap per-graph / engine-wide
+    queue depth: beyond them ``submit()`` sheds the request —
+    ``overload='reject'`` returns a terminal ``REJECTED`` ticket,
+    ``'defer'`` parks it in a holding queue promoted as capacity frees.
+    ``tenant_weights`` shares each graph's lane admission across
+    ``submit(..., tenant=)`` keys by weighted round-robin; ``clock``
+    (default ``time.monotonic``) stamps every ticket timestamp, so SLO
+    accounting is deterministic under test; ``build_fault_hook`` is the
+    §14.3 fault-injection point, called at the top of every artifact
+    build.
     """
 
     def __init__(self, *, kappa: int = 32, cache_bytes: int | None = None,
@@ -1266,7 +1562,14 @@ class BfsEngine:
                  megatick: int = 1,
                  scheduler: str = "rr",
                  weights: dict[str, int] | None = None,
-                 workloads: dict[str, Workload] | None = None):
+                 workloads: dict[str, Workload] | None = None,
+                 build_workers: int = 1,
+                 max_queue: int | None = None,
+                 max_queue_total: int | None = None,
+                 overload: str = "reject",
+                 tenant_weights: dict[str, int] | None = None,
+                 build_fault_hook=None,
+                 clock=None):
         if kappa % 32 != 0 or kappa <= 0:
             raise ValueError("kappa must be a positive multiple of 32")
         if layout not in LAYOUTS:
@@ -1284,6 +1587,21 @@ class BfsEngine:
                 f"scheduler must be one of {SCHEDULERS}, got {scheduler!r}")
         if weights and any(int(w) < 1 for w in weights.values()):
             raise ValueError(f"weights must be >= 1, got {weights}")
+        if build_workers < 0:
+            raise ValueError(
+                f"build_workers must be >= 0, got {build_workers}")
+        if overload not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"overload must be one of {OVERLOAD_POLICIES}, got {overload!r}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if max_queue_total is not None and max_queue_total < 1:
+            raise ValueError(
+                f"max_queue_total must be >= 1, got {max_queue_total}")
+        if tenant_weights and any(int(w) < 1
+                                  for w in tenant_weights.values()):
+            raise ValueError(
+                f"tenant_weights must be >= 1, got {tenant_weights}")
         self.kappa = kappa
         self.layout = layout
         self.use_pallas = use_pallas
@@ -1294,6 +1612,15 @@ class BfsEngine:
         self.scheduler = scheduler
         self.weights = ({k: int(v) for k, v in weights.items()}
                         if weights else None)
+        self.build_workers = int(build_workers)
+        self.max_queue = max_queue
+        self.max_queue_total = max_queue_total
+        self.overload = overload
+        self.tenant_weights = ({k: int(v) for k, v in tenant_weights.items()}
+                               if tenant_weights else None)
+        # injectable clock (§14): every ticket timestamp and queue-wait
+        # stat flows through this, so tests pin exact latency values
+        self._clock = time.monotonic if clock is None else clock
         # per-engine snapshot of the workload registry: register_workload
         # extends this engine alone, workloads.register the module default
         self._workloads = (dict(workloads) if workloads is not None
@@ -1316,10 +1643,19 @@ class BfsEngine:
                                 probe=(switching == "auto"), eta=self.eta,
                                 probe_use_pallas=self._probe_pallas,
                                 probe_runner=self._make_probe_runner,
-                                mma_tiles=self._mma_tiles)
+                                mma_tiles=self._mma_tiles,
+                                builders=max(1, self.build_workers),
+                                fault_hook=build_fault_hook)
         self.cache.on_evict(self._drop_runner)
         self._runners: dict[str, _LaneRunner] = {}
-        self._queues: OrderedDict[str, deque[BfsQuery]] = OrderedDict()
+        self._queues: OrderedDict[str, _TenantQueue] = OrderedDict()
+        # artifacts whose build landed but whose session has not opened
+        # yet: held by reference so cache pressure between install and
+        # session open cannot force a synchronous rebuild (§14.3)
+        self._built: dict[str, GraphArtifacts] = {}
+        # overload='defer' holding queue, promoted each step while the
+        # §14.2 caps allow (counts as neither queue depth nor a lane)
+        self._deferred: deque[BfsQuery] = deque()
         self._rids = itertools.count()
         # scheduler state (§12.2): live sessions, their round-robin
         # rotation, and the tick quantum left for the rotation head
@@ -1342,6 +1678,8 @@ class BfsEngine:
             "levels_dense": 0, "levels_queued": 0,
             "megaticks": 0, "host_syncs": 0,
             "ticks": 0, "session_switches": 0, "max_live_sessions": 0,
+            "builds": 0, "build_failures": 0,
+            "rejected": 0, "deferred": 0,
         }
 
     # ---- registration / admission -----------------------------------------
@@ -1350,9 +1688,10 @@ class BfsEngine:
         self.cache.register(name, graph,
                             reorder=reorder or self.default_reorder)
         # per-graph queue-wait accounting (seconds spent submitted but not
-        # yet seeded into a lane), keyed into stats so launchers/benchmarks
-        # report it without extra plumbing
+        # yet seeded into a lane) and shed counts, keyed into stats so
+        # launchers/benchmarks report them without extra plumbing
         self.stats[f"queue_wait_s:{name}"] = 0.0
+        self.stats[f"rejected:{name}"] = 0
 
     def register_workload(self, workload: Workload) -> None:
         """Register a workload plugin on this engine alone (module-wide
@@ -1366,11 +1705,19 @@ class BfsEngine:
         return sorted(self._workloads)
 
     def submit(self, graph: str, source: int, kind: str = KIND_BFS,
-               *, target: int | None = None) -> Ticket:
+               *, target: int | None = None,
+               tenant: str = "default") -> Ticket:
         """Enqueue one request; returns a :class:`Ticket` (int-compatible
         request id + completion handle).  Legal at any time — between
         ``step()`` calls the request joins the graph's live session
-        mid-flight, exactly like PR 1's mid-flight admission."""
+        mid-flight, exactly like PR 1's mid-flight admission.
+
+        Never blocks on artifact construction (§14.3): a cache miss
+        schedules a background build and the ticket waits in
+        ``BUILDING``.  Over the §14.2 queue-depth caps the request is
+        shed instead of queued — a terminal ``REJECTED`` ticket under
+        ``overload='reject'`` (the engine forgets it immediately), or a
+        deferred one promoted later under ``'defer'``."""
         if not self.cache.is_registered(graph):
             raise KeyError(f"graph {graph!r} not registered")
         wl = self._workloads.get(kind)
@@ -1382,33 +1729,190 @@ class BfsEngine:
             raise ValueError(f"source {source} out of range for {graph!r}")
         rid = next(self._rids)
         q = BfsQuery(rid=rid, graph=graph, source=int(source), kind=kind,
-                     target=None if target is None else int(target))
+                     target=None if target is None else int(target),
+                     tenant=str(tenant))
         wl.validate(q, g)
         ticket = Ticket(rid, self, q)
-        self._tickets[rid] = ticket
-        self._queues.setdefault(graph, deque()).append(q)
         self.stats["queries"] += 1
+        if self._over_capacity(graph):
+            if self.overload == "reject":
+                ticket.state = TicketState.REJECTED
+                ticket.error = (
+                    f"queue for graph {graph!r} at capacity "
+                    f"(max_queue={self.max_queue}, "
+                    f"max_queue_total={self.max_queue_total})")
+                ticket.completed_at = ticket.submitted_at
+                self.stats["rejected"] += 1
+                key = f"rejected:{graph}"
+                self.stats[key] = self.stats.get(key, 0) + 1
+                return ticket
+            self._tickets[rid] = ticket
+            self._deferred.append(q)
+            self.stats["deferred"] += 1
+            return ticket
+        self._tickets[rid] = ticket
+        self._enqueue(q, ticket)
         return ticket
 
     @property
     def pending(self) -> int:
-        """Requests submitted but not yet seeded into a lane."""
-        return sum(len(q) for q in self._queues.values())
+        """Requests submitted but not yet seeded into a lane (deferred
+        arrivals included)."""
+        return (sum(len(q) for q in self._queues.values())
+                + len(self._deferred))
 
     @property
     def in_flight(self) -> int:
         """Requests currently occupying a lane in some live session."""
         return sum(s.in_flight for s in self._sessions.values())
 
+    # ---- admission control / build plumbing (§14) -------------------------
+    def _over_capacity(self, graph: str) -> bool:
+        """The §14.2 queue-depth check: counts requests waiting for a
+        lane (in-flight lanes and deferred arrivals are not depth — the
+        caps bound *waiting* work, which is what latency tails see)."""
+        if self.max_queue is not None:
+            q = self._queues.get(graph)
+            if q is not None and len(q) >= self.max_queue:
+                return True
+        if self.max_queue_total is not None:
+            if sum(len(q) for q in self._queues.values()) >= \
+                    self.max_queue_total:
+                return True
+        return False
+
+    def _enqueue(self, q: BfsQuery, ticket: Ticket | None) -> None:
+        queue = self._queues.get(q.graph)
+        if queue is None:
+            queue = self._queues[q.graph] = _TenantQueue(self.tenant_weights)
+        queue.append(q)
+        self._ensure_build(q.graph, ticket)
+
+    def _ensure_build(self, name: str, ticket: Ticket | None = None) -> None:
+        """Make sure ``name``'s artifact is resident or on its way:
+        schedules a background build on a miss (§14.3) and keeps the
+        affected tickets' lifecycle state honest.  ``build_workers=0``
+        is the legacy synchronous path — the build runs inline (the
+        submitting thread pays for it), with failures still surfacing as
+        ``FAILED`` tickets rather than an engine crash."""
+        if name in self.cache or name in self._built:
+            return
+        if self.build_workers == 0:
+            try:
+                self.cache.get(name)
+            except KeyError:
+                raise
+            except Exception as e:  # noqa: BLE001 — any build error
+                self._fail_graph(name, e)
+            return
+        if not self.cache.build_in_flight(name):
+            self.cache.start_build(name)
+            self.stats["builds"] += 1
+            for pending_q in self._queues.get(name) or ():
+                t = self._tickets.get(pending_q.rid)
+                if t is not None and t.state == TicketState.QUEUED:
+                    t.state = TicketState.BUILDING
+        elif ticket is not None:
+            ticket.state = TicketState.BUILDING
+
+    def _poll_builds(self) -> None:
+        """Collect finished background builds (non-blocking).  Successes
+        move their tickets ``BUILDING → QUEUED``; the artifact reference
+        is held in ``_built`` until the session opens, so an eviction
+        racing the install (a same-poll neighbour became MRU under a
+        tight budget) cannot force a synchronous rebuild.  Failures fan
+        out to the graph's tickets as ``FAILED`` (§14.3)."""
+        for name, art, exc in self.cache.poll_builds():
+            if exc is not None:
+                self._fail_graph(name, exc)
+                continue
+            if self._queues.get(name):
+                self._built[name] = art
+                for q in self._queues[name]:
+                    t = self._tickets.get(q.rid)
+                    if t is not None and t.state == TicketState.BUILDING:
+                        t.state = TicketState.QUEUED
+
+    def _promote_deferred(self) -> None:
+        """Re-admit deferred arrivals (overload='defer') in FIFO order
+        while the §14.2 caps allow; the rest keep waiting."""
+        if not self._deferred:
+            return
+        held: deque[BfsQuery] = deque()
+        while self._deferred:
+            q = self._deferred.popleft()
+            if self._over_capacity(q.graph):
+                held.append(q)
+                continue
+            self._enqueue(q, self._tickets.get(q.rid))
+        self._deferred = held
+
+    def _fail_graph(self, name: str, exc: BaseException) -> None:
+        """Terminate every request waiting on ``name`` with a ``FAILED``
+        ticket (§14.3): the queue and any deferred arrivals drain, other
+        graphs' sessions never notice, and a later submit retries the
+        build from scratch."""
+        self.stats["build_failures"] += 1
+        msg = f"artifact build for graph {name!r} failed: {exc!r}"
+        victims: list[BfsQuery] = []
+        queue = self._queues.pop(name, None)
+        if queue is not None:
+            victims.extend(queue)
+        if self._deferred:
+            victims.extend(q for q in self._deferred if q.graph == name)
+            self._deferred = deque(
+                q for q in self._deferred if q.graph != name)
+        now = self._clock()
+        for q in victims:
+            t = self._tickets.pop(q.rid, None)
+            if t is None:
+                continue
+            t.state = TicketState.FAILED
+            t.error = msg
+            t.completed_at = now
+            self._completed.append(t)
+
+    def _idle_wait(self, timeout: float = 0.05) -> None:
+        """Bounded block for an in-flight background build when a drain
+        loop (``run()`` / ``Ticket.result()``) has nothing else to do —
+        ``step()`` itself never calls this, so pumping stays
+        non-blocking."""
+        if not self._sessions and not self._completed:
+            self.cache.wait_builds(timeout=timeout)
+
+    def _await_builds(self) -> None:
+        """Block until no *queued* graph's artifact build is in flight —
+        ``run()``'s pre-pass.  ``run()`` drains everything anyway (it was
+        the synchronous-build path before §14), so waiting here restores
+        its deterministic all-ready drain — every queued graph's session
+        opens on the first step — without touching the non-blocking
+        ``step()`` contract.  Builds for graphs nothing is queued on are
+        not waited for."""
+        while True:
+            self._poll_builds()
+            self._promote_deferred()
+            waiting = [n for n, q in self._queues.items()
+                       if q and n not in self.cache and n not in self._built]
+            for n in waiting:
+                self._ensure_build(n)
+            if not any(self.cache.build_in_flight(n) for n in waiting):
+                return
+            self.cache.wait_builds(timeout=0.2)
+
     # ---- serving ----------------------------------------------------------
     def step(self) -> list[Ticket]:
-        """Advance one scheduling tick (§12.1): open sessions for graphs
-        with queued work, give the next session in rotation one tick (one
-        traversal level or one megatick window), close it if it went
-        idle, and return the tickets completed by this tick — possibly
-        empty, also when nothing is pending at all.  Non-blocking in the
-        service sense: one bounded slice of work per call, so a caller
-        can interleave submission and pumping in its own loop."""
+        """Advance one scheduling tick (§12.1): collect finished
+        background builds and promote deferred arrivals (§14), open
+        sessions for graphs whose artifacts are ready, give the next
+        session in rotation one tick (one traversal level or one
+        megatick window), close it if it went idle, and return the
+        tickets that reached a terminal state — possibly empty, also
+        when nothing is pending at all.  Non-blocking in the service
+        sense and now also in the *build* sense: one bounded slice of
+        work per call, never a synchronous artifact build (§14.3), so a
+        caller can interleave submission and pumping in its own loop."""
+        self._poll_builds()
+        self._promote_deferred()
         self._open_sessions()
         if self._sessions:
             name = self._schedule()
@@ -1433,38 +1937,78 @@ class BfsEngine:
         round-robin across graph sessions — not the graph-serial drain of
         PR 1 (whose docstring claimed a per-request FIFO it did not
         implement); ``BfsEngine(scheduler="serial")`` restores the old
-        graph-at-a-time behaviour."""
+        graph-at-a-time behaviour.
+
+        Requests that terminated without a result (``REJECTED`` tickets
+        are never the engine's to drain; ``FAILED`` ones surface through
+        their tickets / ``step()``) do not appear in the dict — check
+        ``ticket.state`` or ``stats['build_failures']``."""
         out: dict[int, BfsResult] = {}
+        self._await_builds()
         while self.has_work():
-            for t in self.step():
-                out[int(t)] = t._result
+            stepped = self.step()
+            for t in stepped:
+                if t._result is not None:
+                    out[int(t)] = t._result
+            if not stepped:
+                self._idle_wait()
         return out
 
     def has_work(self) -> bool:
-        """True while any request is queued, any session is live, or a
-        completion awaits delivery by the next ``step()`` (a ticket
-        re-queued by another ticket's ``result()`` pump) — the public
-        pump predicate (``while eng.has_work(): eng.step()``)."""
+        """True while any request is queued (deferred included), any
+        session is live, any artifact build is in flight for queued
+        work, or a completion awaits delivery by the next ``step()`` (a
+        ticket re-queued by another ticket's ``result()`` pump) — the
+        public pump predicate (``while eng.has_work(): eng.step()``)."""
         return (bool(self._sessions) or bool(self._completed)
-                or any(self._queues.values()))
+                or bool(self._deferred) or any(self._queues.values()))
 
     # ---- scheduler (§12.2) ------------------------------------------------
     def _open_sessions(self) -> None:
+        ready: list[str] = []
+        # snapshot: a failed sync build inside _ensure_build pops the
+        # graph's queue (_fail_graph) mid-iteration
+        for name, q in list(self._queues.items()):
+            if not q or name in self._sessions:
+                continue
+            if name in self.cache or name in self._built:
+                ready.append(name)
+            else:
+                # queued work on a non-resident graph (evicted since, or
+                # never built): (re)schedule the background build; the
+                # session opens once it lands.  The synchronous path
+                # (build_workers=0) lands immediately, so it keeps PR 5's
+                # same-step session-open behaviour.
+                self._ensure_build(name)
+                if name in self.cache:
+                    ready.append(name)
         if self.scheduler == "serial":
-            # PR 1 semantics: one graph at a time, in queue-insertion order
-            if self._sessions:
-                return
-            for name, q in self._queues.items():
-                if q:
-                    self._open_session(name)
-                    return
+            # PR 1 semantics: one graph at a time, in queue-insertion
+            # order among the graphs whose artifacts are ready — a graph
+            # mid-build never blocks a ready neighbour's session
+            if not self._sessions and ready:
+                self._open_session(ready[0])
             return
-        for name in [n for n, q in self._queues.items()
-                     if q and n not in self._sessions]:
+        for name in ready:
             self._open_session(name)
 
     def _open_session(self, name: str) -> None:
-        self._sessions[name] = _GraphSession(self, name, self._queues[name])
+        # prefer the resident entry (LRU touch + hit accounting); fall
+        # back to the §14.3 held reference when eviction raced the build
+        held = self._built.pop(name, None)
+        art = self.cache.get(name) if name in self.cache else held
+        if art is None:
+            # evicted between the ready scan and the open: a sync inline
+            # build for a neighbouring graph inside _open_sessions can
+            # shrink the cache mid-scan.  Reschedule (sync rebuilds
+            # inline; async opens once the fresh build lands) instead of
+            # opening a session on a missing artifact.
+            self._ensure_build(name)
+            if name not in self.cache:
+                return
+            art = self.cache.get(name)
+        self._sessions[name] = _GraphSession(
+            self, name, self._queues[name], art)
         self._rotation.append(name)
         if len(self._rotation) == 1:
             self._quantum_left = self._weight(name)
@@ -1501,6 +2045,7 @@ class BfsEngine:
         t = self._tickets.get(q.rid)
         if t is not None:
             t.admitted_at = now
+            t.state = TicketState.RUNNING
             key = f"queue_wait_s:{q.graph}"
             self.stats[key] = (self.stats.get(key, 0.0)
                                + (now - t.submitted_at))
@@ -1509,7 +2054,8 @@ class BfsEngine:
         t = self._tickets.pop(q.rid, None)
         if t is not None:
             t._result = res
-            t.completed_at = time.monotonic()
+            t.state = TicketState.DONE
+            t.completed_at = self._clock()
             self._completed.append(t)
         if self.keep_results:
             self.results[q.rid] = res

@@ -64,6 +64,7 @@ class BfsQuery:
     source: int              # original (pre-reordering) vertex id
     kind: str = KIND_BFS     # a key in the engine's workload registry
     target: int | None = None  # 'distance' destination (original id)
+    tenant: str = "default"  # admission-share key (DESIGN.md §14.2)
 
 
 @dataclasses.dataclass

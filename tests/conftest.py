@@ -11,3 +11,6 @@ if _HERE not in sys.path:
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running test (multi-host simulation etc.)")
+    config.addinivalue_line(
+        "markers", "soak: randomized service soak (step count bounded by "
+        "the REPRO_SOAK_STEPS env knob)")

@@ -1,0 +1,450 @@
+"""Service hardening (DESIGN.md §14): the ticket lifecycle state machine
+(every terminal state — DONE, REJECTED, FAILED — and the QUEUED ⇄
+BUILDING transitions), non-blocking background artifact builds (fault
+injection via ``build_fault_hook``, the eviction-racing-a-build
+pin-during-build regression), queue-depth admission control under both
+overload policies, per-tenant admission weights, and deterministic
+fake-clock timestamp accounting for the PR 5 ticket fields."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ref_bfs
+from repro.data import graphs
+from repro.serve.bfs_engine import (
+    BfsEngine, GraphCache, Ticket, TicketFailed, TicketRejected,
+    TicketState, _TenantQueue)
+from repro.serve.workloads import BfsQuery
+
+UNREACHED = ref_bfs.UNREACHED
+TIMEOUT_S = 60.0
+
+
+def _engine(**kw):
+    kw.setdefault("layout", "byteplane")
+    kw.setdefault("use_pallas", False)
+    kw.setdefault("switching", "off")
+    kw.setdefault("reorder", "natural")
+    return BfsEngine(**kw)
+
+
+def _drain(eng, timeout=TIMEOUT_S):
+    """Pump step() until the engine is idle, collecting every delivered
+    ticket — unlike run(), FAILED deliveries are kept, so tests can
+    assert exactly-once terminal delivery."""
+    out = []
+    t0 = time.monotonic()
+    while eng.has_work():
+        got = eng.step()
+        out.extend(got)
+        if not got:
+            eng._idle_wait()
+        assert time.monotonic() - t0 < timeout, "drain timed out"
+    return out
+
+
+def _pump_until(eng, pred, timeout=TIMEOUT_S):
+    t0 = time.monotonic()
+    while not pred():
+        eng.step()
+        eng._idle_wait(timeout=0.01)
+        assert time.monotonic() - t0 < timeout, "pump timed out"
+
+
+class FakeClock:
+    """Injectable monotonic clock: advances only when told to."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class GatedBuild:
+    """Fault hook that blocks named builds until released (the 'slow
+    injected build' of the ISSUE's acceptance criterion)."""
+
+    def __init__(self, names):
+        self.names = names
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def __call__(self, name):
+        if name in self.names:
+            self.entered.set()
+            assert self.release.wait(TIMEOUT_S), "gate never released"
+
+
+class FailFirst:
+    """Fault hook that fails the first build of ``name`` and lets every
+    retry through — the injectable failure point in build_artifacts'
+    path (§14.3)."""
+
+    def __init__(self, name):
+        self.name = name
+        self.calls = 0
+
+    def __call__(self, n):
+        if n == self.name:
+            self.calls += 1
+            if self.calls == 1:
+                raise RuntimeError("injected build fault")
+
+
+@pytest.fixture(scope="module")
+def duo():
+    return {
+        "kron": graphs.make("kron", scale=6, seed=0),
+        "ring": graphs.make("ring", scale=5),
+    }
+
+
+# ------------------------------------------------- non-blocking submits --
+def test_submit_never_blocks_on_slow_build(duo):
+    """The tentpole acceptance criterion: while an injected build blocks
+    indefinitely, submit() returns immediately with a BUILDING ticket
+    (fake-clock-stamped at the submit instant — no wall time passed
+    inside submit), step() stays non-blocking, and the *other* graph
+    keeps serving."""
+    clock = FakeClock()
+    gate = GatedBuild({"slow"})
+    eng = _engine(clock=clock, build_fault_hook=gate)
+    eng.register_graph("slow", duo["ring"])
+    eng.register_graph("fast", duo["kron"])
+    # build + serve the fast graph first so its artifact is resident
+    # (one builder thread: a queued gated build would serialize behind it)
+    assert eng.submit("fast", 0).result() is not None
+
+    clock.t = 10.0
+    t = eng.submit("slow", 1)
+    assert t.state == TicketState.BUILDING and not t.done()
+    assert t.submitted_at == 10.0  # stamped at submit: no build inside
+    assert gate.entered.wait(TIMEOUT_S)
+    # the gated build is in flight; steps return without blocking on it
+    for _ in range(5):
+        eng.step()
+    assert t.state == TicketState.BUILDING
+    # ...and the fast graph still serves end-to-end meanwhile
+    t2 = eng.submit("fast", 2)
+    _pump_until(eng, t2.done)
+    assert (t2.result().levels == ref_bfs.bfs_levels(duo["kron"], 2)).all()
+    assert t.state == TicketState.BUILDING
+
+    clock.advance(3.5)
+    gate.release.set()
+    _pump_until(eng, t.done)
+    assert t.state == TicketState.DONE
+    # admitted only after the build landed: the whole 3.5s gate shows up
+    assert t.queue_wait == 3.5
+    assert (t.result().levels == ref_bfs.bfs_levels(duo["ring"], 1)).all()
+
+
+def test_building_to_queued_transition_and_overflow(duo):
+    """Submits beyond kappa: all tickets wait in BUILDING, flip to QUEUED
+    when the artifact lands, and exactly kappa are RUNNING after the
+    first admission tick."""
+    kappa = 32
+    eng = _engine(kappa=kappa)
+    eng.register_graph("g", duo["ring"])
+    tickets = [eng.submit("g", i % duo["ring"].n) for i in range(kappa + 8)]
+    assert all(t.state == TicketState.BUILDING for t in tickets)
+    t0 = time.monotonic()
+    while any(not f.done() for f in eng.cache._builds.values()):
+        eng.cache.wait_builds(timeout=0.2)
+        assert time.monotonic() - t0 < TIMEOUT_S
+    eng.step()  # poll + open session + admission tick
+    states = [t.state for t in tickets]
+    assert states.count(TicketState.RUNNING) == kappa
+    assert states.count(TicketState.QUEUED) == 8
+    out = _drain(eng)
+    assert len(out) == kappa + 8
+    assert all(t.state == TicketState.DONE for t in tickets)
+
+
+def test_sync_mode_never_enters_building(duo):
+    """build_workers=0 is the legacy synchronous path: the ticket goes
+    straight to QUEUED (the build ran inline at submit)."""
+    eng = _engine(build_workers=0)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0)
+    assert t.state == TicketState.QUEUED
+    assert "g" in eng.cache  # built inline, on the submitting thread
+    assert (t.result().levels == ref_bfs.bfs_levels(duo["kron"], 0)).all()
+
+
+# ------------------------------------------------------- build failures --
+def test_build_failure_fails_tickets_not_engine(duo):
+    """An artifact build raising yields FAILED tickets (delivered by
+    step() exactly once, result() raising TicketFailed), while the other
+    graph's requests complete; resubmission retries the build."""
+    hook = FailFirst("bad")
+    eng = _engine(build_fault_hook=hook)
+    eng.register_graph("bad", duo["ring"])
+    eng.register_graph("good", duo["kron"])
+    tb1 = eng.submit("bad", 0)
+    tb2 = eng.submit("bad", 1)
+    tg = eng.submit("good", 2)
+    delivered = _drain(eng)
+    assert sorted(int(t) for t in delivered) == [int(tb1), int(tb2), int(tg)]
+    assert tb1.state == tb2.state == TicketState.FAILED
+    assert "injected build fault" in tb1.error
+    assert tb1.done() and tb1.completed_at is not None
+    with pytest.raises(TicketFailed, match="injected build fault"):
+        tb1.result()
+    assert tg.state == TicketState.DONE
+    assert (tg.result().levels == ref_bfs.bfs_levels(duo["kron"], 2)).all()
+    assert eng.stats["build_failures"] == 1
+    # the engine survives: a later submit retries the build from scratch
+    t3 = eng.submit("bad", 0)
+    assert (t3.result().levels == ref_bfs.bfs_levels(duo["ring"], 0)).all()
+    assert hook.calls == 2
+
+
+def test_sync_build_failure_also_fails_tickets(duo):
+    hook = FailFirst("bad")
+    eng = _engine(build_workers=0, build_fault_hook=hook)
+    eng.register_graph("bad", duo["kron"])
+    t = eng.submit("bad", 0)
+    assert t.state == TicketState.FAILED and t.done()
+    with pytest.raises(TicketFailed):
+        t.result()
+    assert eng.run() == {}
+    t2 = eng.submit("bad", 0)
+    assert (t2.result().levels == ref_bfs.bfs_levels(duo["kron"], 0)).all()
+
+
+# --------------------------------------------- admission control (§14.2) --
+def test_reject_policy_sheds_over_cap(duo):
+    eng = _engine(build_workers=0, max_queue=2)
+    eng.register_graph("g", duo["kron"])
+    t1, t2 = eng.submit("g", 0), eng.submit("g", 1)
+    t3 = eng.submit("g", 2)  # queue depth 2 >= cap: shed
+    assert t3.state == TicketState.REJECTED and t3.done()
+    assert t3.queue_wait is None and "capacity" in t3.error
+    with pytest.raises(TicketRejected, match="capacity"):
+        t3.result()
+    assert eng.stats["rejected"] == 1
+    assert eng.stats["rejected:g"] == 1
+    res = eng.run()
+    assert sorted(res) == [int(t1), int(t2)]
+    for t, s in ((t1, 0), (t2, 1)):
+        assert (res[int(t)].levels
+                == ref_bfs.bfs_levels(duo["kron"], s)).all()
+    # capacity freed: the next submit is admitted again
+    t4 = eng.submit("g", 2)
+    assert t4.state == TicketState.QUEUED
+    assert (t4.result().levels == ref_bfs.bfs_levels(duo["kron"], 2)).all()
+
+
+def test_defer_policy_completes_everything(duo):
+    eng = _engine(build_workers=0, max_queue=1, overload="defer")
+    eng.register_graph("g", duo["kron"])
+    tickets = [eng.submit("g", s) for s in range(3)]
+    assert tickets[0].state == TicketState.QUEUED
+    assert tickets[1].state == tickets[2].state == TicketState.QUEUED
+    assert eng.stats["deferred"] == 2 and eng.stats["rejected"] == 0
+    assert eng.pending == 3  # deferred arrivals still count as pending
+    res = eng.run()
+    assert sorted(res) == [int(t) for t in tickets]
+    for t in tickets:
+        assert t.state == TicketState.DONE
+        assert (t.result().levels
+                == ref_bfs.bfs_levels(duo["kron"], t.query.source)).all()
+
+
+def test_global_queue_cap(duo):
+    eng = _engine(build_workers=0, max_queue_total=2)
+    eng.register_graph("a", duo["kron"])
+    eng.register_graph("b", duo["ring"])
+    t1, t2 = eng.submit("a", 0), eng.submit("b", 1)
+    t3 = eng.submit("a", 2)  # total depth 2 >= global cap
+    assert t3.state == TicketState.REJECTED
+    assert eng.stats["rejected:a"] == 1 and eng.stats["rejected:b"] == 0
+    res = eng.run()
+    assert sorted(res) == [int(t1), int(t2)]
+
+
+def test_terminal_states_are_exactly_three():
+    assert TicketState.TERMINAL == {
+        TicketState.DONE, TicketState.REJECTED, TicketState.FAILED}
+
+
+# ------------------------------------------- eviction racing the builder --
+def test_artifact_evicted_before_session_opens_still_serves(duo):
+    """Pin-during-build (§14.3): with a budget of one entry, installing
+    three artifacts from one poll evicts two of them before their
+    sessions ever open.  The engine's held reference must carry the
+    built artifact to its session — a synchronous rebuild would show up
+    as extra cache misses."""
+    gs = {f"g{i}": graphs.make("kron", scale=6, seed=i) for i in range(3)}
+    eng = _engine(cache_bytes=1)  # every install evicts the rest
+    for name, g in gs.items():
+        eng.register_graph(name, g)
+    want = {}
+    for rep in range(2):
+        for name, g in gs.items():
+            want[eng.submit(name, rep)] = (g, rep)
+    # let all three builds finish before the first poll, forcing the
+    # install-then-immediately-evict interleaving deterministically
+    t0 = time.monotonic()
+    while any(not f.done() for f in eng.cache._builds.values()):
+        time.sleep(0.01)
+        assert time.monotonic() - t0 < TIMEOUT_S
+    delivered = _drain(eng)
+    assert len(delivered) == len(want)
+    for t, (g, s) in want.items():
+        assert t.state == TicketState.DONE
+        assert (t.result().levels == ref_bfs.bfs_levels(g, s)).all()
+    assert eng.cache.misses == 3, "evicted mid-build artifact was rebuilt"
+    assert eng.cache.evictions >= 2
+    assert len(eng.cache) == 1
+
+
+def test_eviction_while_queue_waits_reschedules_build(duo):
+    """A graph evicted after its build landed but with requests still
+    queued (and no held reference — the first session already consumed
+    it) schedules a fresh background build instead of blocking."""
+    eng = _engine()
+    eng.register_graph("g", duo["kron"])
+    t1 = eng.submit("g", 0)
+    assert t1.result() is not None
+    assert eng.cache.evict("g") is True
+    assert eng.cache.evict("g") is False  # not resident anymore
+    misses = eng.cache.misses
+    t2 = eng.submit("g", 1)
+    assert t2.state == TicketState.BUILDING  # rebuild scheduled, async
+    _pump_until(eng, t2.done)
+    assert (t2.result().levels == ref_bfs.bfs_levels(duo["kron"], 1)).all()
+    assert eng.cache.misses == misses + 1
+    assert eng.cache.evictions == 1
+
+
+def test_cache_get_refuses_to_race_inflight_build(duo):
+    cache = GraphCache()
+    cache.register("g", duo["kron"])
+    cache.start_build("g")
+    with pytest.raises(RuntimeError, match="in flight"):
+        cache.get("g")
+    t0 = time.monotonic()
+    while any(not f.done() for f in cache._builds.values()):
+        cache.wait_builds(timeout=0.2)
+        assert time.monotonic() - t0 < TIMEOUT_S
+    polled = cache.poll_builds()
+    assert [(n, e) for n, _, e in polled] == [("g", None)]
+    assert "g" in cache and cache.misses == 1
+    cache.get("g")
+    assert cache.hits == 1  # installed entry is a normal LRU resident
+
+
+# --------------------------------------------------- per-tenant weights --
+def test_tenant_queue_weighted_order():
+    q = _TenantQueue({"gold": 3, "free": 1})
+    for i in range(6):
+        q.append(BfsQuery(rid=i, graph="g", source=0, tenant="gold"))
+        q.append(BfsQuery(rid=100 + i, graph="g", source=0, tenant="free"))
+    order = [q.popleft().tenant for _ in range(len(q))]
+    assert order[:8] == ["gold"] * 3 + ["free"] + ["gold"] * 3 + ["free"]
+    # gold drained: the remainder is all free, FIFO
+    assert order[8:] == ["free"] * 4
+    assert len(q) == 0 and not q
+
+
+def test_tenant_weights_share_lane_admission(duo):
+    """kappa=32 lanes, tenants weighted 3:1 with 48 queued requests
+    each: the first admission wave seeds 24 gold and 8 free lanes."""
+    kappa = 32
+    eng = _engine(build_workers=0, kappa=kappa,
+                  tenant_weights={"gold": 3})
+    eng.register_graph("g", duo["kron"])
+    gold = [eng.submit("g", s % duo["kron"].n, tenant="gold")
+            for s in range(48)]
+    free = [eng.submit("g", s % duo["kron"].n, tenant="free")
+            for s in range(48)]
+    eng.step()  # first admission tick fills all kappa lanes
+    assert sum(t.state == TicketState.RUNNING for t in gold) == 24
+    assert sum(t.state == TicketState.RUNNING for t in free) == 8
+    res = eng.run()
+    assert len(res) == 96
+    for t in gold + free:
+        assert (t.result().levels
+                == ref_bfs.bfs_levels(duo["kron"], t.query.source)).all()
+
+
+def test_single_tenant_queue_is_fifo(duo):
+    eng = _engine(build_workers=0, kappa=32)
+    eng.register_graph("g", duo["ring"])
+    tickets = [eng.submit("g", s % duo["ring"].n) for s in range(40)]
+    eng.step()
+    # default tenant, no weights: strict FIFO admission (PR 5 semantics)
+    assert [t.state == TicketState.RUNNING for t in tickets] == \
+        [True] * 32 + [False] * 8
+
+
+# ------------------------------------------------- fake-clock timestamps --
+def test_fake_clock_exact_timestamp_accounting(duo):
+    """Exact-value backfill for the PR 5 ticket timestamp fields: with
+    an injected clock, queue_wait and latency are exact arithmetic, not
+    sleep-dependent wall time."""
+    clock = FakeClock()
+    eng = _engine(build_workers=0, clock=clock)
+    eng.register_graph("g", duo["kron"])
+    clock.t = 100.0
+    t = eng.submit("g", 0)
+    assert t.submitted_at == 100.0
+    assert t.queue_wait is None and t.latency is None
+    clock.advance(2.5)
+    eng.step()  # admission tick stamps admitted_at
+    assert t.state == TicketState.RUNNING
+    assert t.admitted_at == 102.5 and t.queue_wait == 2.5
+    ticks = 0
+    while not t.done():
+        clock.advance(1.0)
+        eng.step()
+        ticks += 1
+        assert ticks < 1000
+    assert t.completed_at == 102.5 + ticks
+    assert t.latency == 2.5 + ticks
+    assert eng.stats["queue_wait_s:g"] == 2.5
+    assert (t.result().levels == ref_bfs.bfs_levels(duo["kron"], 0)).all()
+
+
+def test_fake_clock_rejected_ticket_latency():
+    clock = FakeClock(7.0)
+    eng = _engine(build_workers=0, max_queue=1, clock=clock)
+    eng.register_graph("g", graphs.make("kron", scale=5, seed=0))
+    eng.submit("g", 0)
+    t = eng.submit("g", 1)
+    assert t.state == TicketState.REJECTED
+    # shed at the submit instant: zero latency, never admitted
+    assert t.submitted_at == t.completed_at == 7.0
+    assert t.latency == 0.0 and t.queue_wait is None
+
+
+# ------------------------------------------------------------ API guards --
+def test_constructor_validation(duo):
+    for bad in (dict(build_workers=-1), dict(overload="drop"),
+                dict(max_queue=0), dict(max_queue_total=0),
+                dict(tenant_weights={"a": 0})):
+        with pytest.raises(ValueError):
+            _engine(**bad)
+    with pytest.raises(ValueError):
+        GraphCache(builders=0)
+
+
+def test_run_excludes_failed_tickets_from_results(duo):
+    hook = FailFirst("bad")
+    eng = _engine(build_fault_hook=hook)
+    eng.register_graph("bad", duo["kron"])
+    eng.register_graph("good", duo["kron"])
+    tb = eng.submit("bad", 0)
+    tg = eng.submit("good", 1)
+    res = eng.run()
+    assert sorted(res) == [int(tg)]
+    assert tb.state == TicketState.FAILED
+    assert isinstance(tg, Ticket) and tg.state == TicketState.DONE

@@ -1,0 +1,142 @@
+"""Randomized service soak (DESIGN.md §14): interleave submits, steps,
+evictions, and overload sheds across two graphs under a randomly drawn
+engine configuration, checking oracle exactness and the no-lost /
+no-duplicated-ticket and cache byte-accounting invariants at every step.
+
+Step count is bounded by the ``REPRO_SOAK_STEPS`` env knob (default 60 —
+a few seconds per seed); CI can crank it for a long soak.  Runs under
+the ``soak`` marker: ``pytest -m soak`` selects just these.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ref_bfs
+from repro.data import graphs
+from repro.serve import workloads
+from repro.serve.bfs_engine import BfsEngine, TicketState
+
+from hypothesis_shim import given_seeds
+
+STEPS = int(os.environ.get("REPRO_SOAK_STEPS", "60"))
+
+GRAPHS = {
+    "kron": graphs.make("kron", scale=5, seed=3),
+    "ring": graphs.make("ring", scale=4),
+}
+ORACLE = {(name, s): ref_bfs.bfs_levels(g, s)
+          for name, g in GRAPHS.items() for s in range(min(g.n, 8))}
+
+
+class FlakyFirstBuild:
+    """Fails each graph's first build; retries succeed — exercises the
+    FAILED→resubmit path mid-soak."""
+
+    def __init__(self):
+        self.seen = set()
+
+    def __call__(self, name):
+        if name not in self.seen:
+            self.seen.add(name)
+            raise RuntimeError(f"flaky first build of {name!r}")
+
+
+def _check_cache_invariants(eng):
+    cache = eng.cache
+    total = sum(e.total_bytes for e in cache._entries.values())
+    assert cache.current_bytes == total, "cache byte accounting drifted"
+    if cache.max_bytes is not None:
+        assert (cache.current_bytes <= cache.max_bytes
+                or len(cache._entries) == 1), \
+            "over budget with more than one resident entry"
+
+
+def _check_ticket_invariants(eng, tickets):
+    live = {int(t) for t in tickets if not t.done()}
+    assert set(eng._tickets) == live, \
+        "engine ticket registry out of sync with live tickets"
+
+
+@pytest.mark.soak
+@pytest.mark.parametrize("layout", ["byteplane", "mma"])
+@given_seeds(8)
+def test_service_soak(seed, layout):
+    rng = np.random.default_rng(seed * 2 + (layout == "mma"))
+
+    flaky = bool(rng.integers(0, 2))
+    overload = ["reject", "defer", None][int(rng.integers(0, 3))]
+    kw = dict(
+        kappa=32, layout=layout, use_pallas=False,
+        switching=["off", "auto"][int(rng.integers(0, 2))],
+        reorder="natural",
+        megatick=[1, 4][int(rng.integers(0, 2))],
+        build_workers=int(rng.integers(0, 3)),  # 0 = sync path
+        tenant_weights={"gold": 3} if rng.integers(0, 2) else None,
+    )
+    if overload:
+        kw.update(max_queue=int(rng.integers(4, 48)), overload=overload)
+    if rng.integers(0, 2):
+        # a tight budget so evictions happen organically, never below
+        # one resident entry (the cache always keeps the newest)
+        kw["cache_bytes"] = 1
+    if flaky:
+        kw["build_fault_hook"] = FlakyFirstBuild()
+    eng = BfsEngine(**kw)
+    for name, g in GRAPHS.items():
+        eng.register_graph(name, g)
+
+    names = list(GRAPHS)
+    kinds = ["bfs", "closeness", "reach"]
+    tickets, delivered = [], []
+    for _ in range(STEPS):
+        op = rng.random()
+        if op < 0.45:  # submit a burst
+            for _ in range(int(rng.integers(1, 6))):
+                name = names[int(rng.integers(0, len(names)))]
+                src = int(rng.integers(0, min(GRAPHS[name].n, 8)))
+                kind = kinds[int(rng.integers(0, len(kinds)))]
+                tenant = ["default", "gold"][int(rng.integers(0, 2))]
+                tickets.append(
+                    eng.submit(name, src, kind=kind, tenant=tenant))
+        elif op < 0.55:  # evict a random graph mid-service
+            eng.cache.evict(names[int(rng.integers(0, len(names)))])
+        else:
+            delivered.extend(eng.step())
+        _check_cache_invariants(eng)
+        _check_ticket_invariants(eng, tickets)
+
+    # drain: every submitted ticket must reach a terminal state
+    spins = 0
+    while eng.has_work():
+        got = eng.step()
+        delivered.extend(got)
+        if not got:
+            eng._idle_wait()
+            spins += 1
+            assert spins < 10_000, "drain did not converge"
+    _check_cache_invariants(eng)
+    assert not eng._tickets
+
+    states = {}
+    for t in tickets:
+        assert t.done(), f"ticket {int(t)} not terminal after drain"
+        states[t.state] = states.get(t.state, 0) + 1
+    # exactly-once delivery: every non-rejected ticket delivered once,
+    # REJECTED tickets (shed at submit) never delivered at all
+    ids = [int(t) for t in delivered]
+    assert len(ids) == len(set(ids)), "duplicate ticket delivery"
+    expect = {int(t) for t in tickets
+              if t.state != TicketState.REJECTED}
+    assert set(ids) == expect, "lost or phantom ticket deliveries"
+    if flaky:
+        assert any(t.state == TicketState.FAILED for t in tickets) or \
+            not tickets, "flaky hook never surfaced a FAILED ticket"
+
+    for t in tickets:
+        if t.state != TicketState.DONE:
+            continue
+        q = t.query
+        workloads.verify_result(t.result(wait=False), q,
+                                ORACLE[(q.graph, q.source)],
+                                unreached=ref_bfs.UNREACHED)
