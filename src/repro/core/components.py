@@ -1,0 +1,160 @@
+"""Connected components over the packed bit-substrate (DESIGN.md §15.1).
+
+Weakly connected components are the natural first analytics family beyond
+BFS on the binarized substrate: a BFS from any vertex of a symmetric graph
+visits exactly that vertex's component, so a *lane* of the MS-BFS machinery
+is a component probe — seed kappa lanes at distinct unlabeled vertices,
+advance all of them with the same packed AND/OR pulls the BVSS kernels use,
+and *union lanes on collision* (two lanes touching a common vertex are
+provably in one component).  Bit-GraphBLAS frames the same computation as
+iterated Boolean matrix-vector products; here the kappa lane planes ride one
+(n, kappa)-bit traversal per batch.
+
+Three entry points:
+
+* :func:`connected_components_ref` — the oracle: host-side union-find over
+  the symmetrized edge list.  Labels are canonical (the minimum original
+  vertex id in the component), so every implementation that picks the same
+  canonical label is comparable by exact array equality.
+* :func:`connected_components_packed` — the packed MS-BFS with
+  union-on-collision described above (jitted AND/popc pull, host-side lane
+  union-find), bit-for-bit equal to the oracle.
+* :func:`is_symmetric` — the serve-path dispatch predicate: on a symmetric
+  graph the ``cc`` workload derives component id + size from the lane's own
+  visited set (no precomputation at all); directed graphs fall back to
+  labels built once per graph (DESIGN.md §15.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.triangles import packed_adjacency
+
+
+def is_symmetric(g: Graph) -> bool:
+    """True iff the stored edge set equals its own reverse (undirected)."""
+    key = g.src.astype(np.int64) * g.n + g.dst
+    rkey = g.dst.astype(np.int64) * g.n + g.src
+    return np.array_equal(np.sort(key), np.sort(rkey))
+
+
+def connected_components_ref(g: Graph) -> np.ndarray:
+    """Weak-CC oracle: union-find over the symmetrized edges.
+
+    Returns ``labels`` (n,) int64 with ``labels[v]`` = the minimum vertex
+    id in v's component (the canonical label every other implementation
+    in this module reproduces exactly)."""
+    parent = np.arange(g.n, dtype=np.int64)
+
+    def find(v: int) -> int:
+        root = v
+        while parent[root] != root:
+            root = parent[root]
+        while parent[v] != root:  # path compression
+            parent[v], v = root, parent[v]
+        return root
+
+    for u, v in zip(g.src.tolist(), g.dst.tolist()):
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            # union by label order keeps the root the minimum id for free
+            if ru < rv:
+                parent[rv] = ru
+            else:
+                parent[ru] = rv
+    return np.fromiter((find(v) for v in range(g.n)), np.int64, g.n)
+
+
+def component_sizes(labels: np.ndarray) -> np.ndarray:
+    """Per-vertex component size from a label array: ``sizes[v]`` = the
+    number of vertices sharing ``labels[v]``."""
+    counts = np.bincount(labels, minlength=labels.size)
+    return counts[labels].astype(np.int64)
+
+
+@jax.jit
+def _pull_lanes(rows: jax.Array, fw: jax.Array) -> jax.Array:
+    """One packed multi-lane pull: ``out[v, k]`` = True iff any neighbour
+    of v (bits of ``rows[v]``) is in lane k's frontier (``fw[k]``) — the
+    same AND/popc reduction as the triangle kernels, at (n, kappa, words)."""
+    x = rows[:, None, :] & fw[None, :, :]
+    return jax.lax.population_count(x).astype(jnp.int32).sum(-1) > 0
+
+
+def _pack_lane_rows(bits: np.ndarray) -> np.ndarray:
+    """(kappa, n) bool -> (kappa, words) uint32, same bit convention as
+    :func:`repro.core.triangles.packed_adjacency` (vertex v at word v//32,
+    bit v%32)."""
+    k, n = bits.shape
+    words = (n + 31) // 32
+    pad = np.zeros((k, words * 32), bool)
+    pad[:, :n] = bits
+    b = pad.reshape(k, words, 32).astype(np.uint64)
+    return (b << np.arange(32, dtype=np.uint64)).sum(-1).astype(np.uint32)
+
+
+def connected_components_packed(g: Graph, kappa: int = 32) -> np.ndarray:
+    """Weak CC via packed MS-BFS lanes with union-on-collision.
+
+    Batches of up to ``kappa`` lanes are seeded at the smallest unlabeled
+    vertices and advanced together through the jitted packed pull; the
+    moment two lanes occupy a common vertex they are union'd (host-side
+    union-find over lane indices) and their visited/frontier planes OR'd
+    into the root lane, so a collided component is expanded exactly once.
+    Labels match :func:`connected_components_ref` bit-for-bit: the seeds
+    are the smallest unlabeled ids, hence the minimum vertex of every
+    component reached by a batch is itself one of that batch's seeds."""
+    if kappa < 1:
+        raise ValueError(f"kappa must be >= 1, got {kappa}")
+    n = g.n
+    rows = jnp.asarray(packed_adjacency(g))
+    labels = np.full(n, -1, np.int64)
+    while True:
+        unlabeled = np.flatnonzero(labels < 0)
+        if unlabeled.size == 0:
+            break
+        seeds = unlabeled[:kappa]
+        k = seeds.size
+        vis = np.zeros((kappa, n), bool)
+        vis[np.arange(k), seeds] = True
+        frt = vis.copy()
+        root = np.arange(kappa)
+
+        def find(i: int) -> int:
+            while root[i] != i:
+                root[i] = root[root[i]]
+                i = root[i]
+            return i
+
+        while frt.any():
+            fw = jnp.asarray(_pack_lane_rows(frt))
+            pulled = np.asarray(_pull_lanes(rows, fw)).T  # (kappa, n)
+            new = pulled & ~vis
+            vis |= new
+            frt = new
+            # union-on-collision: any vertex occupied by >1 lanes proves
+            # those lanes share a component
+            occ = vis.sum(0)
+            for v in np.flatnonzero(occ > 1):
+                owners = np.flatnonzero(vis[:, v])
+                r0 = find(int(owners[0]))
+                for o in owners[1:]:
+                    r = find(int(o))
+                    if r != r0:
+                        lo, hi = min(r, r0), max(r, r0)
+                        root[hi] = lo
+                        vis[lo] |= vis[hi]
+                        frt[lo] |= frt[hi]
+                        vis[hi] = False
+                        frt[hi] = False
+                        r0 = lo
+        # a root lane's plane holds its whole union group's component;
+        # the canonical label is the group's minimum seed (seeds ascend,
+        # so that is the seed of the lowest lane index in the group)
+        for r in set(find(i) for i in range(k)):
+            group = [i for i in range(k) if find(i) == r]
+            labels[vis[r]] = int(seeds[min(group)])
+    return labels

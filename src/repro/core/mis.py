@@ -1,0 +1,153 @@
+"""Maximal independent set over the packed bit-substrate (DESIGN.md §15.1).
+
+TC-MIS (PAPERS.md) shows Luby's algorithm is a bit-matrix workload: one
+round keeps every candidate vertex whose random priority is a strict local
+minimum among candidate neighbours, then deletes winners and their
+neighbourhoods.  The local-minimum test is exactly the packed AND/popc
+machinery of :mod:`repro.core.triangles`: a vertex's candidate
+neighbourhood is ``rows[v] & cand``, and "does any of them beat my key?"
+is answered *bit-serially* over the key — walk the key bits MSB→LSB,
+keeping per vertex the packed set of neighbours still tied with its own
+prefix; a tied neighbour whose next bit is 0 where ours is 1 beats us.
+
+Determinism: rounds are replayed from ``np.random.default_rng((seed,
+round))``, and every key is made unique by appending the vertex id as the
+low 32 bits (jax runs without x64, so the 64-bit key lives as an
+(hi, lo) uint32 pair and the bit-serial sweep simply walks hi then lo).
+:func:`mis_ref` replays the identical rounds in plain numpy, so the packed
+implementation is comparable by exact array equality, not just by checking
+independence + maximality.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.triangles import packed_adjacency
+
+
+def luby_keys(n: int, seed: int, rnd: int) -> np.ndarray:
+    """Round ``rnd``'s random priorities: (n,) uint32, identical for the
+    packed and reference implementations by construction."""
+    return np.random.default_rng((seed, rnd)).integers(
+        0, 1 << 32, size=n, dtype=np.uint64).astype(np.uint32)
+
+
+def _pack_bool(bits: np.ndarray) -> np.ndarray:
+    """(n,) bool -> (words,) uint32 in :func:`packed_adjacency`'s bit
+    convention (vertex v at word v//32, bit v%32)."""
+    n = bits.size
+    words = (n + 31) // 32
+    pad = np.zeros(words * 32, bool)
+    pad[:n] = bits
+    b = pad.reshape(words, 32).astype(np.uint64)
+    return (b << np.arange(32, dtype=np.uint64)).sum(-1).astype(np.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def _local_min_round(rows, cand_w, keys, key_words, nbits: int):
+    """One Luby round's winner set, packed.
+
+    ``rows`` (n, words) uint32 packed adjacency; ``cand_w`` (words,) the
+    candidate set; ``keys`` (n, P) uint32 — P key *planes* walked
+    most-significant-plane first, ``nbits`` bits each MSB→LSB;
+    ``key_words`` (P, nbits, words) uint32 — per plane and bit, the packed
+    vector of vertices whose key bit is **1**.  Returns (n,) bool: vertex
+    is a candidate and no candidate neighbour has a strictly smaller key.
+    """
+    tied = rows & cand_w[None, :]          # (n, words) still-tied nbrs
+    lost = jnp.zeros(rows.shape[0], bool)  # some nbr beats our prefix
+    for p in range(keys.shape[1]):
+        for b in range(nbits - 1, -1, -1):
+            ob = key_words[p, b]                       # nbrs with bit 1
+            kb = (keys[:, p] >> b) & 1                 # our own bit
+            # a tied neighbour with bit 0 under our bit 1 is smaller
+            zb_hit = jax.lax.population_count(
+                tied & ~ob[None, :]).astype(jnp.int32).sum(-1) > 0
+            lost = lost | ((kb == 1) & zb_hit)
+            # neighbours stay tied only by matching our bit
+            tied = tied & jnp.where((kb == 1)[:, None], ob[None, :],
+                                    (~ob)[None, :])
+    return ~lost
+
+
+@jax.jit
+def _neighbours_of(rows, sel_w):
+    """(n,) bool: vertex has a neighbour in the packed set ``sel_w``."""
+    return jax.lax.population_count(
+        rows & sel_w[None, :]).astype(jnp.int32).sum(-1) > 0
+
+
+def mis_packed(g: Graph, seed: int = 0) -> np.ndarray:
+    """Deterministic Luby MIS on the packed substrate; (n,) bool
+    membership, bit-for-bit equal to :func:`mis_ref` on the same seed."""
+    n = g.n
+    rows = jnp.asarray(packed_adjacency(g))
+    vid = np.arange(n, dtype=np.uint32)
+    id_words = np.stack([_pack_bool((vid >> b) & 1 == 1)
+                         for b in range(32)])  # (32, words), round-invariant
+    in_mis = np.zeros(n, bool)
+    cand = np.ones(n, bool)
+    rnd = 0
+    while cand.any():
+        p = luby_keys(n, seed, rnd)
+        keys = np.stack([p, vid], axis=1)  # (n, 2): hi plane, lo plane
+        key_words = np.stack(
+            [np.stack([_pack_bool((p >> b) & 1 == 1) for b in range(32)]),
+             id_words])  # (2, 32, words)
+        win = np.asarray(_local_min_round(
+            rows, jnp.asarray(_pack_bool(cand)), jnp.asarray(keys),
+            jnp.asarray(key_words), 32))
+        sel = cand & win
+        in_mis |= sel
+        knocked = np.asarray(_neighbours_of(
+            rows, jnp.asarray(_pack_bool(sel))))
+        cand &= ~(sel | knocked)
+        rnd += 1
+        if rnd > n + 1:  # every round removes >= 1 vertex
+            raise RuntimeError("Luby rounds failed to converge")
+    return in_mis
+
+
+def mis_ref(g: Graph, seed: int = 0) -> np.ndarray:
+    """Oracle: the identical deterministic Luby rounds in plain numpy —
+    64-bit key = (priority << 32) | vertex id, winners are strict local
+    minima over candidate neighbours in the symmetrized graph."""
+    gs = g.symmetrized()
+    n = g.n
+    su, sv = gs.src.astype(np.int64), gs.dst.astype(np.int64)
+    in_mis = np.zeros(n, bool)
+    cand = np.ones(n, bool)
+    rnd = 0
+    while cand.any():
+        p = luby_keys(n, seed, rnd)
+        key = ((p.astype(np.uint64) << np.uint64(32))
+               | np.arange(n, dtype=np.uint64))
+        sel = cand.copy()
+        both = cand[su] & cand[sv]
+        # an edge where our key is the larger one eliminates us (keys are
+        # unique, so exactly one endpoint survives each comparison)
+        sel[su[both & (key[su] > key[sv])]] = False
+        in_mis |= sel
+        knocked = np.zeros(n, bool)
+        knocked[sv[sel[su]]] = True
+        cand &= ~(sel | knocked)
+        rnd += 1
+        if rnd > n + 1:
+            raise RuntimeError("Luby rounds failed to converge")
+    return in_mis
+
+
+def mis_verify(g: Graph, in_mis: np.ndarray) -> None:
+    """Assert ``in_mis`` is independent and maximal on the symmetrized
+    graph (seed-free sanity check used by the property suite)."""
+    gs = g.symmetrized()
+    su, sv = gs.src, gs.dst
+    assert not (in_mis[su] & in_mis[sv]).any(), "not independent"
+    covered = in_mis.copy()
+    covered[sv[in_mis[su]]] = True
+    assert covered.all(), "not maximal"

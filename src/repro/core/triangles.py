@@ -64,3 +64,86 @@ def triangle_count_ref(g: Graph) -> int:
     a[gs.src, gs.dst] = True
     a2 = (a.astype(np.int64) @ a.astype(np.int64))
     return int((a2 * a).sum() // 6)
+
+
+# ---------------------------------------------------------------------------
+# Per-vertex triangle counts (the serve engine's `tpv` kind, DESIGN.md §15.1)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _edge_intersection_counts(rows: jax.Array, src: jax.Array,
+                              dst: jax.Array) -> jax.Array:
+    """Per-edge |N(src) ∩ N(dst)| — the batched form of
+    :func:`_count_edge_intersections` without the final reduction."""
+    a = rows[src]
+    b = rows[dst]
+    return jax.lax.population_count(a & b).astype(jnp.int32).sum(-1)
+
+
+def triangles_per_vertex(g: Graph, batch: int = 1 << 14) -> np.ndarray:
+    """(n,) int64 triangle incidences per vertex via batched AND+popcount:
+    summing |N(v) ∩ N(u)| over v's neighbours u counts each triangle at v
+    twice (once per incident edge), so the per-vertex total halves."""
+    rows = jnp.asarray(packed_adjacency(g))
+    gs = g.symmetrized()
+    src = np.asarray(gs.src)
+    dst = np.asarray(gs.dst)
+    per_edge = np.empty(len(src), np.int64)
+    for off in range(0, len(src), batch):
+        s = jnp.asarray(src[off : off + batch])
+        d = jnp.asarray(dst[off : off + batch])
+        per_edge[off : off + batch] = np.asarray(
+            _edge_intersection_counts(rows, s, d))
+    per_v = np.bincount(src, weights=per_edge, minlength=g.n).astype(np.int64)
+    assert (per_v % 2 == 0).all(), "symmetrized graph must 2-count per vertex"
+    return per_v // 2
+
+
+def triangles_per_vertex_ref(g: Graph) -> np.ndarray:
+    """Oracle: dense boolean matrix formula, per-vertex row of the trace."""
+    a = np.zeros((g.n, g.n), dtype=bool)
+    gs = g.symmetrized()
+    a[gs.src, gs.dst] = True
+    a2 = a.astype(np.int64) @ a.astype(np.int64)
+    return (a2 * a).sum(axis=1) // 2
+
+
+class TpvState:
+    """Per-graph device state for on-demand single-vertex triangle queries
+    (the serve engine's ``tpv`` graph state, DESIGN.md §15.2): the packed
+    adjacency with a zero row appended at index n (the gather pad — padded
+    neighbour slots intersect nothing), plus the symmetrized CSR."""
+
+    __slots__ = ("n", "rows_ext", "ptrs", "cols")
+
+    def __init__(self, g: Graph):
+        self.n = g.n
+        rows = packed_adjacency(g)
+        self.rows_ext = jnp.asarray(
+            np.vstack([rows, np.zeros((1, rows.shape[1]), np.uint32)]))
+        self.ptrs, self.cols = g.symmetrized().csr
+
+
+@jax.jit
+def _vertex_triangles(rows_ext: jax.Array, v: jax.Array,
+                      nbrs: jax.Array) -> jax.Array:
+    inter = rows_ext[nbrs] & rows_ext[v][None, :]
+    return jax.lax.population_count(inter).astype(jnp.int32).sum()
+
+
+def triangles_of_vertex(state: TpvState, v: int) -> int:
+    """One vertex's triangle count from a :class:`TpvState`: gather the
+    neighbour rows (padded to the next power of two with the zero row, so
+    jit retraces are bounded by log2(max degree)) and AND against row v."""
+    lo, hi = int(state.ptrs[v]), int(state.ptrs[v + 1])
+    deg = hi - lo
+    if deg == 0:
+        return 0
+    cap = 1 << (deg - 1).bit_length()
+    nbrs = np.full(cap, state.n, np.int64)
+    nbrs[:deg] = state.cols[lo:hi]
+    total = int(_vertex_triangles(state.rows_ext, jnp.asarray(v),
+                                  jnp.asarray(nbrs)))
+    assert total % 2 == 0
+    return total // 2

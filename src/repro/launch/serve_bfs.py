@@ -3,7 +3,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve_bfs \
         --families kron,road --scale 10 --requests 128 --kappa 32 \
-        [--kinds bfs,closeness,distance,reach] [--closeness-frac 0.25] \
+        [--kinds bfs,closeness,distance,reach,cc,mis,tpv] \
+        [--closeness-frac 0.25] \
         [--cache-mb 64] [--verify] [--scheduler {rr,serial}] \
         [--switching {auto,on,off}] [--eta 10.0] [--megatick 64]
 
@@ -13,13 +14,17 @@ requests, drains the engine, and reports throughput, per-request latency
 per-graph queue wait (``eng.stats``), and admission/cache/switching
 statistics.  ``--verify`` checks every result against the CPU oracle —
 bit-identical levels for ``bfs``, exact far/reach for ``closeness``,
-exact s→t distance for ``distance``, exact counts for ``reach`` — the
+exact s→t distance for ``distance``, exact counts for ``reach``, and
+exact component/MIS/triangle answers for the §15 analytics kinds — the
 serving analogue of ``repro.launch.bfs --verify``.
 
 ``--kinds`` selects the workload mix (DESIGN.md §12.3): the default
 ``bfs,closeness`` reproduces the pre-ticket launcher (``bfs`` vs
 ``closeness`` split by ``--closeness-frac``); any other comma list draws
 kinds uniformly, with ``distance`` queries aimed at a random target.
+The graph-analytics kinds (DESIGN.md §15) ride the same flag: ``cc``
+(connected component id + size), ``mis`` (deterministic-Luby maximal
+independent set membership), and ``tpv`` (triangles per vertex).
 ``--scheduler serial`` restores the PR 1 graph-at-a-time drain (§12.2) —
 compare the reported p99 against the default round-robin to see the
 fairness win ``benchmarks/serve_fairness.py`` measures.
@@ -234,9 +239,12 @@ def main():
             if t.state != TicketState.DONE:
                 continue
             q = t.query
+            # graph= feeds the memoized cc/mis/tpv references (§15.3);
+            # harmless for the level-derived kinds
             verify_result(results[int(t)], q,
                           ref_bfs.bfs_levels(fleet[q.graph], q.source),
-                          unreached=ref_bfs.UNREACHED)
+                          unreached=ref_bfs.UNREACHED,
+                          graph=fleet[q.graph])
         print("verified against CPU oracle ✓")
 
 

@@ -190,6 +190,7 @@ from repro.kernels.scatter_or import scatter_or, scatter_or_ref
 from repro.serve import workloads as workloads_mod
 from repro.serve.workloads import (  # re-exported: the request/result
     KIND_BFS, KIND_CLOSENESS, KIND_DISTANCE, KIND_REACH,  # noqa: F401
+    KIND_CC, KIND_MIS, KIND_TPV,  # noqa: F401
     BfsQuery, BfsResult, Workload)
 
 SWITCHING_MODES = ("auto", "on", "off")
@@ -1190,6 +1191,50 @@ class _LaneRunner:
 # the BfsResult fields a Workload.extract override may set
 _RESULT_FIELDS = frozenset(BfsResult.__dataclass_fields__)
 
+# extract() override typing (§15.3): field name -> acceptable scalar types
+# (None always allowed).  ``levels`` is shape-checked separately; ``extra``
+# must be a dict.  A workload returning a malformed override corrupts every
+# caller downstream of verify_result, so the engine rejects it loudly at
+# extraction instead.
+_INT_RESULT_FIELDS = frozenset({
+    "far", "reach", "admitted_at_level", "distance", "component",
+    "component_size", "mis_size", "triangles"})
+
+
+def _check_extract_field(kind: str, field: str, value, n: int) -> None:
+    if value is None:
+        return
+    if field == "levels":
+        if (not isinstance(value, np.ndarray) or value.shape != (n,)
+                or not np.issubdtype(value.dtype, np.integer)):
+            raise ValueError(
+                f"workload {kind!r} extract() returned a bad 'levels': "
+                f"want an (n,)=({n},) integer ndarray, got "
+                f"{type(value).__name__}"
+                + (f" of shape {value.shape}, dtype {value.dtype}"
+                   if isinstance(value, np.ndarray) else ""))
+    elif field in _INT_RESULT_FIELDS:
+        if isinstance(value, bool) or not isinstance(value,
+                                                     (int, np.integer)):
+            raise ValueError(
+                f"workload {kind!r} extract() returned a non-int "
+                f"{field!r}: {value!r}")
+    elif field == "in_mis":
+        if not isinstance(value, (bool, np.bool_)):
+            raise ValueError(
+                f"workload {kind!r} extract() returned a non-bool "
+                f"'in_mis': {value!r}")
+    elif field == "closeness":
+        if not isinstance(value, (float, np.floating)):
+            raise ValueError(
+                f"workload {kind!r} extract() returned a non-float "
+                f"'closeness': {value!r}")
+    elif field == "extra":
+        if not isinstance(value, dict):
+            raise ValueError(
+                f"workload {kind!r} extract() returned a non-dict "
+                f"'extra': {value!r}")
+
 
 class _GraphSession:
     """Resumable per-graph serving state (DESIGN.md §12.2).
@@ -1239,6 +1284,10 @@ class _GraphSession:
         self.watch_dev = None
         self.tl = np.full(kappa, UNREACHED, np.int64)
         self.policy_on = engine._policy_active(art)
+        # session-held workload graph state (§15.2): populated from the
+        # engine memo at first use, kept here so eviction mid-service
+        # never forces a rebuild (the same pinning rule as art/runner)
+        self.graph_states: dict[str, object] = {}
         self.state = self.runner.init_state()
         self.ell = 0
         # device copies of the lane metadata the megatick window reads;
@@ -1478,20 +1527,34 @@ class _GraphSession:
             if (wl.watches_target and self.watch_ids[i] >= 0
                     and self.tl[i] != UNREACHED):
                 target_level = int(self.tl[i] - self.admitted_at[i])
+            gstate = None
+            if wl.has_graph_state:
+                if q.kind not in self.graph_states:
+                    self.graph_states[q.kind] = eng._workload_graph_state(
+                        self.name, wl, art.graph)
+                gstate = self.graph_states[q.kind]
             view = workloads_mod.LaneView(
                 query=q, n=n, admitted_at_level=int(self.admitted_at[i]),
                 far=int(self.far64[i]), reach=int(self.reach_host[i]),
                 levels=cols.get(i), target_level=target_level,
-                acc=self.accs[i])
+                acc=self.accs[i], graph_state=gstate)
             res = BfsResult(
                 rid=q.rid, graph=q.graph, source=q.source, kind=q.kind,
                 levels=None, far=view.far, reach=view.reach, closeness=None,
                 admitted_at_level=view.admitted_at_level)
-            for field, value in (wl.extract(view) or {}).items():
+            out = wl.extract(view)
+            if out is None:
+                out = {}
+            if not isinstance(out, dict):
+                raise ValueError(
+                    f"workload {wl.kind!r} extract() must return a dict of "
+                    f"BfsResult field overrides, got {type(out).__name__}")
+            for field, value in out.items():
                 if field not in _RESULT_FIELDS:
                     raise ValueError(
                         f"workload {wl.kind!r} extract() returned unknown "
                         f"BfsResult field {field!r}")
+                _check_extract_field(wl.kind, field, value, n)
                 setattr(res, field, value)
             eng._lane_completed(q, res)
 
@@ -1648,6 +1711,11 @@ class BfsEngine:
                                 fault_hook=build_fault_hook)
         self.cache.on_evict(self._drop_runner)
         self._runners: dict[str, _LaneRunner] = {}
+        # per-graph workload state (DESIGN.md §15.2): graph name ->
+        # {kind: Workload.graph_state(graph)}, built lazily on the first
+        # finished lane of that kind and dropped with the cache entry
+        # (live sessions hold their own reference, like the substrate)
+        self._wl_state: dict[str, dict[str, object]] = {}
         self._queues: OrderedDict[str, _TenantQueue] = OrderedDict()
         # artifacts whose build landed but whose session has not opened
         # yet: held by reference so cache pressure between install and
@@ -1693,12 +1761,23 @@ class BfsEngine:
         self.stats[f"queue_wait_s:{name}"] = 0.0
         self.stats[f"rejected:{name}"] = 0
 
-    def register_workload(self, workload: Workload) -> None:
+    def register_workload(self, workload: Workload, *,
+                          replace: bool = False) -> None:
         """Register a workload plugin on this engine alone (module-wide
-        default for engines built later: ``repro.serve.workloads.register``)."""
+        default for engines built later: ``repro.serve.workloads.register``).
+        Duplicate kinds raise unless ``replace=True`` — silently shadowing
+        a built-in would change the semantics of every subsequent submit
+        of that kind (§15.3)."""
         if not workload.kind:
             raise ValueError("workload must set a non-empty kind")
+        if not replace and workload.kind in self._workloads:
+            raise ValueError(
+                f"workload kind {workload.kind!r} already registered on "
+                f"this engine (pass replace=True to override)")
         self._workloads[workload.kind] = workload
+        # a replaced workload's memoized per-graph state is stale
+        for per in self._wl_state.values():
+            per.pop(workload.kind, None)
 
     @property
     def workload_kinds(self) -> list[str]:
@@ -2124,6 +2203,17 @@ class BfsEngine:
 
     def _drop_runner(self, name: str) -> None:
         self._runners.pop(name, None)
+        self._wl_state.pop(name, None)
+
+    def _workload_graph_state(self, name: str, wl: Workload, graph) -> object:
+        """Memoized ``Workload.graph_state`` for ``graph`` (§15.2): shared
+        across sessions while the cache entry lives, rebuilt lazily after
+        eviction (a live session keeps its own reference, see
+        ``_GraphSession.graph_states``)."""
+        per = self._wl_state.setdefault(name, {})
+        if wl.kind not in per:
+            per[wl.kind] = wl.graph_state(graph)
+        return per[wl.kind]
 
     def _policy_active(self, art: GraphArtifacts) -> bool:
         """Resolve the per-graph mode policy (DESIGN.md §10.3): 'off' forces

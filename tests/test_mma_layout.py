@@ -1,10 +1,11 @@
-"""MMA pull layout (DESIGN.md §13) through the serving stack: all four
-built-in workload kinds × switching {auto,on,off} × megatick {1,64} on
-``layout='mma'`` verified against the CPU oracle, the packed-substrate
-(Pallas) variant, the GraphCache accounting/eviction of tile-prep aux
-bytes, the pad-and-mask tile-alignment regression on a deliberately
-misaligned ``n``, the layout='auto' probe's ``dense_layout`` verdict,
-and ``PackedMsBfs(kernel='mma')`` equivalence with the gather kernel."""
+"""MMA pull layout (DESIGN.md §13) through the serving stack: the
+packed-substrate (Pallas) variant, the GraphCache accounting/eviction of
+tile-prep aux bytes, the pad-and-mask tile-alignment regression on a
+deliberately misaligned ``n``, the layout='auto' probe's ``dense_layout``
+verdict, and ``PackedMsBfs(kernel='mma')`` equivalence with the gather
+kernel.  The kind × switching × megatick oracle sweep on ``layout='mma'``
+lives in tests/workload_matrix.py (run by test_workload_matrix.py, every
+workload kind included)."""
 import numpy as np
 import pytest
 from numpy.testing import assert_array_equal
@@ -15,15 +16,8 @@ from repro.core.graph import from_edges
 from repro.data import graphs
 from repro.kernels import pull_mma_ms_packed as mma
 from repro.serve.bfs_engine import BfsEngine, GraphCache
-from repro.serve.workloads import verify_result
 
 UNREACHED = ref_bfs.UNREACHED
-
-KINDS = ["bfs", "closeness", "distance", "reach"]
-# (switching, eta): dense-forced, queued-forced, probe-gated auto —
-# the same policy triple test_service_api.py sweeps on the base layouts
-MODES = [("off", 10.0), ("on", 0.0), ("auto", 10.0)]
-MEGATICKS = [1, 64]
 
 
 def _engine(**kw):
@@ -55,37 +49,9 @@ def oracle(duo):
     return get
 
 
-# ------------------------------------------------- kinds x policy matrix --
-@pytest.mark.parametrize("megatick", MEGATICKS)
-@pytest.mark.parametrize("switching,eta", MODES)
-def test_all_kinds_match_oracle_on_mma(duo, oracle, switching, eta, megatick):
-    """Every built-in workload kind, served over the MMA dense path, must
-    be oracle-exact under all three mode policies and both tick shapes."""
-    eng = _engine(kappa=32, switching=switching, eta=eta, megatick=megatick)
-    rng = np.random.default_rng(MEGATICKS.index(megatick) * 8
-                                + KINDS.index("bfs")
-                                + len(switching))
-    tickets = []
-    for name, g in duo.items():
-        eng.register_graph(name, g)
-        for kind in KINDS:
-            for _ in range(2):
-                src = int(rng.integers(0, g.n))
-                target = (int(rng.integers(0, g.n))
-                          if kind == "distance" else None)
-                tickets.append(eng.submit(name, src, kind=kind,
-                                          target=target))
-    results = eng.run()
-    assert len(results) == len(tickets)
-    for t in tickets:
-        q = t.query
-        verify_result(results[int(t)], q, oracle(q.graph, q.source),
-                      unreached=UNREACHED)
-    for name in duo:  # forced layout really resolved to the MMA runner
-        r = eng._runners[name]
-        assert r.layout == "mma" and r._tiles is not None
-
-
+# the kinds × policy matrix on layout='mma' moved to the shared sweep:
+# tests/workload_matrix.py includes 'mma' in MATRIX_LAYOUTS and asserts
+# the forced layout resolved (runner.layout == 'mma', tiles present)
 def test_mma_packed_substrate_matches_oracle(duo, oracle):
     """use_pallas=True routes the MMA layout onto the packed substrate:
     dense levels run the fused Pallas MMA pull+scatter kernel (interpret

@@ -1,10 +1,12 @@
 """Ticket-based service API (DESIGN.md §12): int-compatible tickets with
 completion timestamps, incremental ``step()`` pumping with submission
 between steps, the fair cross-graph scheduler (round-robin / weighted /
-serial), the workload plugin registry — ``distance`` and ``reach``
-verified against the CPU oracle across layout x switching x megatick —
-and the cache/queue edge cases the old graph-serial drain never hit
-(eviction under a live session, re-submission after eviction)."""
+serial), the workload plugin registry and its validation surface
+(duplicate/unknown kinds, malformed ``extract`` overrides), and the
+cache/queue edge cases the old graph-serial drain never hit (eviction
+under a live session, re-submission after eviction).  The kind-vs-oracle
+layout × switching × megatick sweep lives in tests/workload_matrix.py
+(applied to every kind by test_workload_matrix.py)."""
 import numpy as np
 import pytest
 
@@ -15,11 +17,6 @@ from repro.serve import workloads as workloads_mod
 from repro.serve.workloads import Workload
 
 UNREACHED = ref_bfs.UNREACHED
-
-LAYOUTS = ["byteplane", "packed"]
-# (switching, eta): dense-forced, queued-forced, probe-gated auto
-MODES = [("off", 10.0), ("on", 0.0), ("auto", 10.0)]
-MEGATICKS = [1, 4, 64]
 
 
 def _engine(**kw):
@@ -188,41 +185,9 @@ def test_queue_wait_accounting(duo):
 
 
 # -------------------------------------------------- workloads: new kinds ---
-@pytest.mark.parametrize("layout", LAYOUTS)
-@pytest.mark.parametrize("switching,eta", MODES)
-@pytest.mark.parametrize("megatick", MEGATICKS)
-def test_distance_and_reach_match_oracle(duo, layout, switching, eta,
-                                         megatick):
-    """The two new plugin kinds against the CPU oracle in every
-    layout x switching x megatick configuration, interleaved across two
-    graphs (so sessions, windows, and early exits all engage)."""
-    eng = _engine(layout=layout, switching=switching, eta=eta,
-                  megatick=megatick)
-    for name, g in duo.items():
-        eng.register_graph(name, g)
-    rng = np.random.default_rng(1)
-    want = []
-    for name, g in duo.items():
-        for s, t in zip(rng.integers(0, g.n, 4), rng.integers(0, g.n, 4)):
-            want.append((eng.submit(name, int(s), kind="distance",
-                                    target=int(t)), g, int(s), int(t)))
-        for s in rng.integers(0, g.n, 4):
-            want.append((eng.submit(name, int(s), kind="reach"),
-                         g, int(s), None))
-    res = eng.run()
-    for ticket, g, s, t in want:
-        lv = ref_bfs.bfs_levels(g, s)
-        r = res[ticket]
-        if t is not None:
-            exp = None if lv[t] == UNREACHED else int(lv[t])
-            assert r.distance == exp, (layout, switching, megatick, s, t)
-            assert r.levels is None
-        else:
-            assert r.reach == int((lv != UNREACHED).sum()), \
-                (layout, switching, megatick, s)
-            assert r.levels is None and r.closeness is None
-
-
+# the kind × layout × switching × megatick oracle sweep (distance, reach,
+# and the §15 analytics kinds alike) is tests/workload_matrix.py, driven
+# by test_workload_matrix.py — only the per-kind *edge* cases stay here
 def test_distance_early_exit_frees_lane(duo):
     """A near target on the high-diameter ring: the lane exits the tick
     the target's bit lights, so the session runs a handful of levels
@@ -342,6 +307,76 @@ def test_register_workload_validation():
         eng.register_workload(Workload())  # empty kind
     with pytest.raises(ValueError):
         workloads_mod.register(Workload())
+
+
+class _BfsShadow(Workload):
+    kind = "bfs"
+
+
+def test_register_workload_rejects_duplicate_kind():
+    """Silently shadowing a registered kind would flip the semantics of
+    every later submit of that kind: duplicates raise, replace=True is
+    the explicit override (engine-local and module registries alike)."""
+    eng = _engine()
+    with pytest.raises(ValueError, match="already registered"):
+        eng.register_workload(_BfsShadow())
+    eng.register_workload(_BfsShadow(), replace=True)
+    assert eng._workloads["bfs"] is not None
+    with pytest.raises(ValueError, match="already registered"):
+        workloads_mod.register(_BfsShadow())
+    # other engines are unaffected by the engine-local replace
+    assert isinstance(workloads_mod.default_registry()["bfs"],
+                      workloads_mod.BfsWorkload)
+
+
+def test_submit_unknown_kind_rejected(duo):
+    eng = _engine()
+    eng.register_graph("g", duo["kron"])
+    with pytest.raises(ValueError, match="unknown query kind"):
+        eng.submit("g", 0, kind="pagerank")
+    with pytest.raises(KeyError):
+        eng.submit("nope", 0)  # unknown graph still a KeyError
+
+
+class _BadShape(Workload):
+    """levels of the wrong shape: must be rejected at extraction, not
+    silently handed to the caller."""
+
+    kind = "bad-shape"
+    needs_levels = True
+
+    def extract(self, lane):
+        return {"levels": lane.levels[:-1]}  # (n-1,) — wrong shape
+
+
+class _BadType(Workload):
+    kind = "bad-type"
+
+    def extract(self, lane):
+        return {"reach": "lots"}
+
+
+class _BadReturn(Workload):
+    kind = "bad-return"
+
+    def extract(self, lane):
+        return [("reach", 1)]  # not a dict
+
+
+@pytest.mark.parametrize("wl,err", [
+    (_BadShape(), "bad 'levels'"),
+    (_BadType(), "non-int 'reach'"),
+    (_BadReturn(), "must return a dict"),
+])
+def test_extract_shape_validation(duo, wl, err):
+    """A workload whose extract() returns the wrong shape/type fails
+    loudly at extraction (the §15.3 validation gap)."""
+    eng = _engine()
+    eng.register_graph("g", duo["kron"])
+    eng.register_workload(wl)
+    eng.submit("g", 0, kind=wl.kind)
+    with pytest.raises(ValueError, match=err):
+        eng.run()
 
 
 # --------------------------------------------------- cache/session edges ---

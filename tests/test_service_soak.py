@@ -87,7 +87,9 @@ def test_service_soak(seed, layout):
         eng.register_graph(name, g)
 
     names = list(GRAPHS)
-    kinds = ["bfs", "closeness", "reach"]
+    # every registered kind rides the soak — the §15 analytics kinds
+    # (cc/mis/tpv) exercise graph-state rebuilds across random evictions
+    kinds = sorted(eng.workload_kinds)
     tickets, delivered = [], []
     for _ in range(STEPS):
         op = rng.random()
@@ -97,8 +99,11 @@ def test_service_soak(seed, layout):
                 src = int(rng.integers(0, min(GRAPHS[name].n, 8)))
                 kind = kinds[int(rng.integers(0, len(kinds)))]
                 tenant = ["default", "gold"][int(rng.integers(0, 2))]
+                extra = ({"target": int(rng.integers(0, GRAPHS[name].n))}
+                         if kind == "distance" else {})
                 tickets.append(
-                    eng.submit(name, src, kind=kind, tenant=tenant))
+                    eng.submit(name, src, kind=kind, tenant=tenant,
+                               **extra))
         elif op < 0.55:  # evict a random graph mid-service
             eng.cache.evict(names[int(rng.integers(0, len(names)))])
         else:
@@ -139,4 +144,5 @@ def test_service_soak(seed, layout):
         q = t.query
         workloads.verify_result(t.result(wait=False), q,
                                 ORACLE[(q.graph, q.source)],
-                                unreached=ref_bfs.UNREACHED)
+                                unreached=ref_bfs.UNREACHED,
+                                graph=GRAPHS[q.graph])

@@ -1,0 +1,58 @@
+"""Every workload kind × the full layout × switching × megatick matrix
+(DESIGN.md §15.3): one engine per cell serves all seven built-in kinds
+interleaved over three graphs (symmetric kron, directed kron, ring), with
+every result checked against its pure-CPU reference through
+``workloads.verify_result``.  ``tests/workload_matrix.py`` is the single
+source of truth for the sweep — the per-kind oracle tests that used to
+live in test_service_api.py / test_mma_layout.py are these cells now."""
+import numpy as np
+import pytest
+
+from repro.serve.workloads import Workload
+
+from workload_matrix import (ALL_KINDS, MATRIX, UNREACHED, register_kind,
+                             run_matrix_cell)
+
+
+@pytest.mark.parametrize("layout,switching,eta,megatick", MATRIX)
+def test_all_kinds_match_oracle(layout, switching, eta, megatick):
+    eng = run_matrix_cell(layout, switching, eta, megatick)
+    # the cell really did serve every registered kind
+    assert sorted(eng.workload_kinds) == ALL_KINDS
+    assert eng.stats["queries"] == len(ALL_KINDS) * 2 * 3
+
+
+def test_matrix_covers_both_substrates_and_analytics_kinds():
+    """The sweep's guarantees are structural: all three layouts (both
+    substrates + MMA), both tick shapes, all three policies, and the
+    three analytics kinds are in every cell's kind list."""
+    layouts = {c[0] for c in MATRIX}
+    assert layouts == {"byteplane", "packed", "mma"}
+    assert {c[3] for c in MATRIX} == {1, 64}
+    assert {c[1] for c in MATRIX} == {"off", "on", "auto"}
+    for kind in ("cc", "mis", "tpv"):
+        assert kind in ALL_KINDS
+
+
+class _ReachTwin(Workload):
+    """Demo future kind: same answer as ``reach``, custom oracle — the
+    one-line-registration path a new workload family would take."""
+
+    kind = "reach-twin"
+
+
+def _verify_reach_twin(res, query, levels, graph):
+    assert res.reach == int((levels != UNREACHED).sum())
+
+
+def test_future_kind_joins_matrix_with_one_registration():
+    register_kind("reach-twin", verifier=_verify_reach_twin)
+    try:
+        eng = run_matrix_cell(
+            "byteplane", "off", 10.0, 1, kinds=["reach-twin"],
+            engine_kw={"workloads": {"reach-twin": _ReachTwin()}})
+        assert eng.stats["queries"] == 2 * 3
+    finally:
+        from workload_matrix import QUERY_FACTORIES, VERIFIERS
+        VERIFIERS.pop("reach-twin", None)
+        QUERY_FACTORIES.pop("reach-twin", None)

@@ -1,0 +1,124 @@
+"""The cross-kind differential oracle matrix (DESIGN.md §15.3).
+
+One helper owns the layout × switching × megatick configuration sweep that
+every workload kind must survive: ``run_matrix_cell`` builds an engine for
+one cell, interleaves queries of the requested kinds across three graphs
+(symmetric scale-free, *directed* scale-free, high-diameter ring — so
+megatick windows, early exits, and the ``cc`` union-find fallback all
+engage), drains, and pushes every result through
+``repro.serve.workloads.verify_result`` against the pure-CPU references.
+
+This file is the single source of truth for kind-correctness sweeps:
+``tests/test_workload_matrix.py`` parametrizes over :data:`MATRIX` cells
+with all registered kinds, and a future kind joins the sweep with one
+:func:`register_kind` line (only needed when its queries take extra
+arguments or its oracle is not a ``verify_result`` built-in).
+"""
+import numpy as np
+
+from repro.core import ref_bfs
+from repro.data import graphs
+from repro.serve import workloads
+from repro.serve.bfs_engine import BfsEngine
+
+UNREACHED = ref_bfs.UNREACHED
+
+# layouts are both substrates plus the bit-MMA formulation (DESIGN.md §13);
+# (switching, eta) = dense-forced, queued-forced, probe-gated auto
+MATRIX_LAYOUTS = ["byteplane", "packed", "mma"]
+MODES = [("off", 10.0), ("on", 0.0), ("auto", 10.0)]
+MEGATICKS = [1, 64]
+MATRIX = [(lay, sw, eta, mt)
+          for lay in MATRIX_LAYOUTS
+          for sw, eta in MODES
+          for mt in MEGATICKS]
+
+ALL_KINDS = sorted(workloads.default_registry())
+
+# kind -> rng, graph -> extra submit() kwargs (future kinds taking extra
+# query arguments register theirs here); kind -> custom verifier for kinds
+# verify_result does not know (res, query, levels, graph)
+QUERY_FACTORIES = {
+    workloads.KIND_DISTANCE:
+        lambda rng, g: {"target": int(rng.integers(0, g.n))},
+}
+VERIFIERS = {}
+
+
+def register_kind(kind, make_extra=None, verifier=None):
+    """One-line registration hook for future kinds: optional extra-kwarg
+    factory and optional custom oracle (defaults to ``verify_result``)."""
+    if make_extra is not None:
+        QUERY_FACTORIES[kind] = make_extra
+    if verifier is not None:
+        VERIFIERS[kind] = verifier
+
+
+_GRAPHS = None
+_LEVELS = {}
+
+
+def matrix_graphs():
+    """The three serving-regime graphs, module-cached so the per-graph
+    reference memos (verify_result's, and the level arrays here) hit."""
+    global _GRAPHS
+    if _GRAPHS is None:
+        _GRAPHS = {
+            "ksym": graphs.make("kron", scale=6, seed=0).symmetrized(),
+            "kdir": graphs.make("kron", scale=5, seed=1),
+            "ring": graphs.make("ring", scale=5),
+        }
+    return _GRAPHS
+
+
+def _oracle_levels(name, g, src):
+    if (name, src) not in _LEVELS:
+        _LEVELS[name, src] = ref_bfs.bfs_levels(g, src)
+    return _LEVELS[name, src]
+
+
+def run_matrix_cell(layout, switching, eta, megatick, *, kinds=None,
+                    duo=None, queries_per_kind=2, seed=0, kappa=32,
+                    engine_kw=None):
+    """Run one matrix cell: every kind's queries interleaved through one
+    engine, every result oracle-verified.  Returns the drained engine so
+    callers can make extra assertions (stats, runner internals)."""
+    kinds = ALL_KINDS if kinds is None else list(kinds)
+    duo = matrix_graphs() if duo is None else duo
+    kw = dict(layout=layout, switching=switching, eta=eta,
+              megatick=megatick, kappa=kappa, use_pallas=False)
+    kw.update(engine_kw or {})
+    eng = BfsEngine(**kw)
+    rng = np.random.default_rng(
+        [seed, MATRIX_LAYOUTS.index(layout), MEGATICKS.index(megatick),
+         len(switching)])
+    want = []
+    for name, g in duo.items():
+        eng.register_graph(name, g)
+        for kind in kinds:
+            extra = QUERY_FACTORIES.get(kind, lambda rng, g: {})
+            for _ in range(queries_per_kind):
+                src = int(rng.integers(0, g.n))
+                want.append((eng.submit(name, src, kind=kind,
+                                        **extra(rng, g)), name, g))
+    results = eng.run()
+    assert len(results) == len(want)
+    for ticket, name, g in want:
+        q = ticket.query
+        res = results[int(ticket)]
+        check = VERIFIERS.get(q.kind)
+        lv = _oracle_levels(name, g, q.source)
+        if check is not None:
+            check(res, q, lv, g)
+        else:
+            workloads.verify_result(res, q, lv, unreached=UNREACHED,
+                                    graph=g)
+    # a forced layout must actually have resolved: the cell tested what
+    # it claims to test
+    if layout != "auto":
+        for name in duo:
+            r = eng._runners[name]
+            assert r.layout == layout, (layout, name, r.layout)
+            if layout == "mma":
+                assert r._tiles is not None
+    return eng
