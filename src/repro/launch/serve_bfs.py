@@ -47,6 +47,18 @@ queue-depth caps shed load — rejected tickets are counted and reported
 (and excluded from the latency percentiles, which cover admitted
 requests only).  ``benchmarks/serve_overload.py`` measures the p99 this
 buys under Zipf overload.
+
+``--deadline-ms``/``--build-retries``/``--cancel-rate`` surface the §16
+lifecycle layer: ``--deadline-ms B`` attaches a ``B`` millisecond SLO
+budget to every request (the EWMA predictor sheds predicted violators
+at admission and expires hopeless requests at seeding and window
+boundaries — ``benchmarks/serve_slo.py`` measures the attainment this
+buys), ``--build-retries N`` absorbs up to ``N`` transient artifact
+build failures per graph with §16.3 exponential backoff, and
+``--cancel-rate F`` cancels a random fraction ``F`` of submitted
+requests mid-stream (a client-abandonment demo).  The report grows
+expired / cancelled / degraded counts and the ``engine.health()``
+lifecycle summary alongside the §14 shed statistics.
 """
 from __future__ import annotations
 
@@ -109,6 +121,20 @@ def main():
                     help="over-cap policy (§14.2): reject sheds with a "
                          "REJECTED ticket, defer parks the request until "
                          "capacity frees")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO budget in milliseconds "
+                         "(DESIGN.md §16.1): predicted violators are "
+                         "shed at admission, hopeless requests expire "
+                         "at seeding/window boundaries; default: no "
+                         "deadlines")
+    ap.add_argument("--build-retries", type=int, default=0,
+                    help="transient artifact-build failures absorbed "
+                         "per graph with exponential backoff (§16.3); "
+                         "0 = first failure is terminal")
+    ap.add_argument("--cancel-rate", type=float, default=0.0,
+                    help="fraction of submitted requests cancelled "
+                         "mid-stream (§16.2 client-abandonment demo); "
+                         "default 0")
     ap.add_argument("--verify", action="store_true",
                     help="check every result against the CPU oracle")
     args = ap.parse_args()
@@ -137,6 +163,12 @@ def main():
                    if args.cache_mb is not None else None)
     if args.builders < 0:
         ap.error(f"--builders must be >= 0, got {args.builders}")
+    if args.deadline_ms is not None and args.deadline_ms <= 0:
+        ap.error(f"--deadline-ms must be > 0, got {args.deadline_ms}")
+    if args.build_retries < 0:
+        ap.error(f"--build-retries must be >= 0, got {args.build_retries}")
+    if not 0.0 <= args.cancel_rate <= 1.0:
+        ap.error(f"--cancel-rate must be in [0, 1], got {args.cancel_rate}")
     eng = BfsEngine(kappa=args.kappa, cache_bytes=cache_bytes,
                     layout=args.layout, scheduler=args.scheduler,
                     switching=args.switching,
@@ -144,7 +176,8 @@ def main():
                     build_workers=args.builders,
                     max_queue=args.max_queue,
                     max_queue_total=args.max_queue_total,
-                    overload=args.overload)
+                    overload=args.overload,
+                    build_retries=args.build_retries)
 
     kinds = [k.strip() for k in args.kinds.split(",") if k.strip()]
     bad = [k for k in kinds if k not in eng.workload_kinds]
@@ -161,7 +194,9 @@ def main():
 
     names = list(fleet)
     tickets = []
-    for _ in range(args.requests):
+    results = {}
+    t0 = time.perf_counter()
+    for i in range(args.requests):
         name = names[int(rng.integers(0, len(names)))]
         g = fleet[name]
         src = int(rng.integers(0, g.n))
@@ -171,10 +206,22 @@ def main():
         else:
             kind = kinds[int(rng.integers(0, len(kinds)))]
         target = (int(rng.integers(0, g.n)) if kind == "distance" else None)
-        tickets.append(eng.submit(name, src, kind=kind, target=target))
-
-    t0 = time.perf_counter()
-    results = eng.run()
+        deadline = (args.deadline_ms * 1e-3
+                    if args.deadline_ms is not None else None)
+        tickets.append(eng.submit(name, src, kind=kind, target=target,
+                                  deadline=deadline))
+        if args.cancel_rate:
+            # interleave a few windows so cancels hit running lanes
+            # (reclaimed at the boundary, §16.2) as well as queues
+            if i % 8 == 7:
+                for t in eng.step():
+                    if t.state == TicketState.DONE:
+                        results[int(t)] = t.result(wait=False)
+            if rng.random() < args.cancel_rate:
+                live = [t for t in tickets if not t.done()]
+                if live:
+                    live[int(rng.integers(0, len(live)))].cancel()
+    results.update(eng.run())
     dt = time.perf_counter() - t0
 
     by_kind = {k: sum(1 for t in tickets if t.query.kind == k)
@@ -184,9 +231,12 @@ def main():
           f"({len(results) / dt:.1f} qps)")
     shed = sum(1 for t in tickets if t.state == TicketState.REJECTED)
     failed = sum(1 for t in tickets if t.state == TicketState.FAILED)
-    if shed or failed:
+    expired = sum(1 for t in tickets if t.state == TicketState.EXPIRED)
+    cancelled = sum(1 for t in tickets if t.state == TicketState.CANCELLED)
+    if shed or failed or expired or cancelled:
         print(f"shed {shed} (overload={args.overload}) failed {failed} "
-              f"of {len(tickets)} submitted (§14.2)")
+              f"expired {expired} cancelled {cancelled} "
+              f"of {len(tickets)} submitted (§14.2, §16)")
     # per-request latency from the tickets' timestamps (§12.1): submission
     # to extraction, so it includes queue wait under backlog; admitted
     # (DONE) requests only — shed tickets never entered a lane
@@ -231,6 +281,15 @@ def main():
     print(f"cache: {len(c)} resident ({c.current_bytes / (1 << 20):.2f} MiB) "
           f"hits={c.hits} misses={c.misses} evictions={c.evictions} "
           f"builds={s['builds']} build_failures={s['build_failures']}")
+    h = eng.health()
+    print(f"health: build_retries={h.build_retries} "
+          f"retry_pending={h.retry_pending} "
+          f"deadline_misses={h.deadline_misses} "
+          f"degraded={dict(h.degraded) or '{}'}")
+    if args.deadline_ms is not None and h.service_times:
+        ewma = " ".join(f"{k}={v * 1e3:.2f}ms"
+                        for k, v in sorted(h.service_times.items()))
+        print(f"  ewma service: {ewma}")
 
     if args.verify:
         from repro.serve.workloads import verify_result

@@ -13,6 +13,15 @@ built in, ``register`` for more).  The service is hardened for
 open-loop overload (§14): artifact builds run on a background pool
 (tickets wait in ``BUILDING``; build failures become per-ticket
 ``FAILED`` results), queue-depth caps shed load (``REJECTED``/deferred
-tickets) and per-tenant weights share lane admission.  ``serve_loop``
-is the LM decode continuous-batching engine the graph engine's
-slot-refill design mirrors."""
+tickets) and per-tenant weights share lane admission.  Requests carry a
+deadline-aware lifecycle (§16, policy layer in ``lifecycle``):
+``submit(deadline=)`` sheds predicted SLO violators via an EWMA
+service-time model and expires hopeless requests at seeding/window
+boundaries (``EXPIRED``), ``ticket.cancel()`` frees queued work
+immediately and reclaims running lanes at the next window boundary
+(``CANCELLED``), transient build failures retry with capped exponential
+backoff, a faulting non-base layout quarantines per ``(graph, layout)``
+and falls back to the base substrate instead of failing tickets, and
+``engine.health()`` snapshots the whole lifecycle for operators.
+``serve_loop`` is the LM decode continuous-batching engine the graph
+engine's slot-refill design mirrors."""

@@ -187,6 +187,7 @@ from repro.kernels.pull_ms_packed_queued import (
 from repro.kernels.pull_scatter_ms_packed import (
     pull_scatter_ms_packed, pull_scatter_ms_packed_ref)
 from repro.kernels.scatter_or import scatter_or, scatter_or_ref
+from repro.serve import lifecycle as lifecycle_mod
 from repro.serve import workloads as workloads_mod
 from repro.serve.workloads import (  # re-exported: the request/result
     KIND_BFS, KIND_CLOSENESS, KIND_DISTANCE, KIND_REACH,  # noqa: F401
@@ -205,11 +206,11 @@ OVERLOAD_POLICIES = ("reject", "defer")
 
 
 class TicketState:
-    """Ticket lifecycle (DESIGN.md §14.1)::
+    """Ticket lifecycle (DESIGN.md §14.1, extended by §16)::
 
         QUEUED ⇄ BUILDING → RUNNING → DONE
-           ↓                             (terminal)
-        REJECTED / FAILED (terminal)
+           ↓                    ↓         (terminal)
+        REJECTED / FAILED / EXPIRED / CANCELLED (terminal)
 
     ``QUEUED`` waits for a lane with the artifact resident; ``BUILDING``
     waits for the graph's background artifact build — the two swap
@@ -217,7 +218,11 @@ class TicketState:
     to the lane queue).  ``RUNNING`` is seeded into a lane.  Terminal:
     ``DONE`` (result extracted), ``REJECTED`` (shed at submission by the
     §14.2 admission policy), ``FAILED`` (the artifact build raised;
-    ``ticket.error`` carries the cause)."""
+    ``ticket.error`` carries the cause), ``EXPIRED`` (deadline passed or
+    its violation was predicted, §16.1 — at submission, at lane seeding,
+    or at a window boundary), ``CANCELLED`` (the caller's
+    ``ticket.cancel()``, §16.2 — immediate while waiting, at the next
+    window boundary once seeded)."""
 
     QUEUED = "QUEUED"
     BUILDING = "BUILDING"
@@ -225,7 +230,9 @@ class TicketState:
     DONE = "DONE"
     REJECTED = "REJECTED"
     FAILED = "FAILED"
-    TERMINAL = frozenset({DONE, REJECTED, FAILED})
+    EXPIRED = "EXPIRED"
+    CANCELLED = "CANCELLED"
+    TERMINAL = frozenset({DONE, REJECTED, FAILED, EXPIRED, CANCELLED})
 
 
 class TicketError(RuntimeError):
@@ -238,6 +245,14 @@ class TicketRejected(TicketError):
 
 class TicketFailed(TicketError):
     """``result()`` of a ticket whose graph's artifact build failed (§14.3)."""
+
+
+class TicketExpired(TicketError):
+    """``result()`` of a ticket shed or reclaimed by its deadline (§16.1)."""
+
+
+class TicketCancelled(TicketError):
+    """``result()`` of a ticket the caller cancelled (§16.2)."""
 
 
 class Ticket(int):
@@ -273,9 +288,13 @@ class Ticket(int):
     submitted_at: float
     admitted_at: float | None
     completed_at: float | None
+    deadline: float | None
+    deadline_at: float | None
+    cancel_requested: bool
     _result: BfsResult | None
 
-    def __new__(cls, rid: int, engine: "BfsEngine", query: BfsQuery):
+    def __new__(cls, rid: int, engine: "BfsEngine", query: BfsQuery,
+                deadline: float | None = None):
         t = super().__new__(cls, rid)
         t._engine = engine
         t.query = query
@@ -284,11 +303,31 @@ class Ticket(int):
         t.submitted_at = engine._clock()
         t.admitted_at = None
         t.completed_at = None
+        # SLO budget (§16.1): relative seconds granted at submission and
+        # the absolute engine-clock instant the budget runs out
+        t.deadline = deadline
+        t.deadline_at = (None if deadline is None
+                         else t.submitted_at + deadline)
+        t.cancel_requested = False
         t._result = None
         return t
 
     def done(self) -> bool:
         return self.state in TicketState.TERMINAL
+
+    def cancel(self) -> bool:
+        """Withdraw this request (§16.2).  A waiting ticket
+        (``QUEUED``/``BUILDING``/deferred) goes terminal ``CANCELLED``
+        immediately and its queue slot is freed; a ``RUNNING`` one is
+        flagged and its lane is reclaimed at the next megatick window
+        boundary (the column is parked and wiped, the lane returns to
+        the free set, the other lanes' bits are untouched).  Returns
+        True when the request is or will be cancelled, False when it
+        already reached a terminal state (including a prior
+        cancellation) — cancel never un-completes anything.  The
+        terminal notification is delivered through ``step()`` exactly
+        once, like every other in-engine terminal."""
+        return self._engine._cancel(self)
 
     def result(self, *, wait: bool = True) -> BfsResult:
         """The finished :class:`BfsResult`.  ``wait=True`` (default) pumps
@@ -321,6 +360,12 @@ class Ticket(int):
         if self.state == TicketState.FAILED:
             raise TicketFailed(
                 self.error or f"request {int(self)} failed")
+        if self.state == TicketState.EXPIRED:
+            raise TicketExpired(
+                self.error or f"request {int(self)} missed its deadline")
+        if self.state == TicketState.CANCELLED:
+            raise TicketCancelled(
+                self.error or f"request {int(self)} was cancelled")
         if self._result is None:
             raise RuntimeError(f"request {int(self)} has not completed"
                                + ("" if wait else " (wait=False)"))
@@ -371,6 +416,10 @@ class GraphArtifacts:
     # the bit-MMA pull; its nbytes are in aux_bytes (the eviction budget
     # must see layout-auxiliary device arrays too, or the cache over-admits)
     mma: mma_mod.MmaTiles | None = None
+    # §16.4 graceful degradation: a tile-prep exception does not fail the
+    # build — the cause lands here and the engine quarantines the
+    # (graph, 'mma') pair, serving the base layout instead
+    degraded: str | None = None
 
     @property
     def total_bytes(self) -> int:
@@ -408,7 +457,15 @@ def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
     gp = g.permuted(rr.perm)
     b = build_bvss(gp, config)
     bd = blest.to_device(b)
-    tiles = mma_mod.prep_mma_tiles(bd) if mma_tiles else None
+    tiles, degraded = None, None
+    if mma_tiles:
+        # §16.4: the MMA tiles are a layout *accelerator*, not a
+        # correctness requirement — a tile-prep exception degrades this
+        # graph to the base substrate instead of failing every ticket
+        try:
+            tiles = mma_mod.prep_mma_tiles(bd)
+        except Exception as e:  # noqa: BLE001 — any tile-prep error
+            degraded = f"mma tile prep raised: {e!r}"
     sw = None
     if probe:
         if probe_runner is not None:
@@ -434,7 +491,7 @@ def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
     return GraphArtifacts(name=name, graph=g, bvss=b, bd=bd, perm=perm,
                           reorder=rr, switching=sw,
                           device_bytes=dev_bytes, aux_bytes=aux_bytes,
-                          mma=tiles)
+                          mma=tiles, degraded=degraded)
 
 
 class GraphCache:
@@ -456,7 +513,21 @@ class GraphCache:
     the polling thread.  ``fault_hook`` (a ``fn(name)`` called at the
     top of every build, sync or async) is the §14.3 fault-injection
     point — raising from it fails the build exactly like a real
-    preprocessing error."""
+    preprocessing error (:class:`repro.serve.lifecycle.ScriptedFaults`
+    scripts flaky-then-succeed sequences through it).
+
+    Build failures are classified (§16.3,
+    :func:`repro.serve.lifecycle.classify_build_failure`): a transient
+    failure earns up to ``build_retries`` further attempts under capped
+    exponential backoff (``retry_backoff`` doubling up to
+    ``retry_backoff_cap``, timed on the injectable ``clock``) before it
+    is reported terminal; a permanent one is reported on the first.
+    Synchronous ``get`` retries inline without backoff (the caller is
+    already blocking).  Dispatch beyond the ``builders`` thread bound is
+    a priority queue, not FIFO: ``build_priority`` (a ``name -> int``
+    callable, read on the polling thread) picks the parked build with
+    the highest score — the engine wires it to queued depth so the
+    build unblocking the most tickets runs first (§16.5)."""
 
     def __init__(self, max_bytes: int | None = None,
                  config: BvssConfig | None = None, *,
@@ -466,9 +537,20 @@ class GraphCache:
                  probe_runner=None,
                  mma_tiles: bool = False,
                  builders: int = 1,
-                 fault_hook=None):
+                 fault_hook=None,
+                 build_retries: int = 0,
+                 retry_backoff: float = 0.05,
+                 retry_backoff_cap: float = 2.0,
+                 clock=None):
         if builders < 1:
             raise ValueError(f"builders must be >= 1, got {builders}")
+        if build_retries < 0:
+            raise ValueError(
+                f"build_retries must be >= 0, got {build_retries}")
+        if retry_backoff <= 0 or retry_backoff_cap < retry_backoff:
+            raise ValueError(
+                f"need 0 < retry_backoff <= retry_backoff_cap, got "
+                f"{retry_backoff} / {retry_backoff_cap}")
         self.max_bytes = max_bytes
         self.config = config or BvssConfig()
         self.probe = probe
@@ -478,16 +560,29 @@ class GraphCache:
         self.mma_tiles = mma_tiles
         self.builders = int(builders)
         self.fault_hook = fault_hook
+        self.build_retries = int(build_retries)
+        self.retry_backoff = float(retry_backoff)
+        self.retry_backoff_cap = float(retry_backoff_cap)
+        self._clock = time.monotonic if clock is None else clock
+        # §16.5 dispatch priority: name -> int, higher first (None = FIFO)
+        self.build_priority = None
         self._specs: dict[str, tuple[Graph, str | None]] = {}
         self._entries: OrderedDict[str, GraphArtifacts] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.retries = 0
         self._evict_listeners: list = []
         # in-flight background builds: name -> Future[GraphArtifacts].
         # The executor is created lazily and torn down whenever the build
         # set drains, so idle engines hold no threads.
         self._builds: dict = {}
+        # accepted builds waiting for a worker slot (insertion-ordered;
+        # _dispatch picks by build_priority) and §16.3 backoff state:
+        # name -> (attempts so far, clock instant the retry is due)
+        self._build_queue: OrderedDict[str, None] = OrderedDict()
+        self._retry: dict[str, tuple[int, float]] = {}
+        self._attempts: dict[str, int] = {}
         self._executor: ThreadPoolExecutor | None = None
 
     def register(self, name: str, graph: Graph, *,
@@ -542,9 +637,27 @@ class GraphCache:
                 f"artifact build for {name!r} is in flight on the "
                 f"background builder; poll_builds() until it lands")
         self.misses += 1
-        art = self._build(name)
+        art = self._build_sync(name)
         self._install(name, art)
         return art
+
+    def _build_sync(self, name: str) -> GraphArtifacts:
+        """The synchronous miss path with §16.3 retries folded inline:
+        transient failures are retried up to ``build_retries`` times
+        immediately (the caller is already blocking — backoff belongs
+        to the background path), permanent ones re-raise at once."""
+        attempt = 1
+        while True:
+            try:
+                return self._build(name)
+            except Exception as exc:  # noqa: BLE001 — classified below
+                if (attempt <= self.build_retries
+                        and lifecycle_mod.classify_build_failure(exc)
+                        == "transient"):
+                    attempt += 1
+                    self.retries += 1
+                    continue
+                raise
 
     def _build(self, name: str) -> GraphArtifacts:
         """One artifact build (fault hook, then the real preprocessing) —
@@ -565,32 +678,66 @@ class GraphCache:
         self._entries.move_to_end(name)
         self._shrink()
 
-    # ---- background builds (DESIGN.md §14.3) ------------------------------
+    # ---- background builds (DESIGN.md §14.3, retries §16.3) ---------------
     def start_build(self, name: str) -> None:
-        """Schedule ``name``'s artifact build on the background pool
-        (bounded at ``builders`` threads; excess builds queue behind
-        them).  No-op when the entry is resident or its build is already
-        in flight.  Counts a miss — the build *is* the miss work, moved
-        off-thread; installation into the LRU happens on the polling
-        thread at the next :meth:`poll_builds`."""
-        if name in self._entries or name in self._builds:
+        """Accept ``name``'s artifact build for the background pool.
+        No-op when the entry is resident or its build is already pending
+        (in flight, parked for a worker slot, or waiting out a backoff).
+        Counts a miss — the build *is* the miss work, moved off-thread;
+        installation into the LRU happens on the polling thread at the
+        next :meth:`poll_builds`.  At most ``builders`` builds run at
+        once; beyond that the build parks and :meth:`poll_builds`
+        dispatches it by ``build_priority`` when a slot frees (§16.5)."""
+        if name in self._entries or self.build_pending(name):
             return
         if name not in self._specs:
             raise KeyError(f"graph {name!r} not registered")
-        if self._executor is None:
-            self._executor = ThreadPoolExecutor(
-                max_workers=self.builders, thread_name_prefix="artifact-build")
         self.misses += 1
-        self._builds[name] = self._executor.submit(self._build, name)
+        self._build_queue[name] = None
+        self._dispatch()
+
+    def _dispatch(self) -> None:
+        """Move parked builds onto worker slots, highest
+        ``build_priority`` first (insertion order when unset or tied —
+        ``max`` keeps the first of equals)."""
+        while self._build_queue and len(self._builds) < self.builders:
+            if self.build_priority is None:
+                name = next(iter(self._build_queue))
+            else:
+                name = max(self._build_queue, key=self.build_priority)
+            del self._build_queue[name]
+            if name in self._entries:  # became resident while parked
+                continue
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=self.builders,
+                    thread_name_prefix="artifact-build")
+            self._attempts[name] = self._attempts.get(name, 0) + 1
+            self._builds[name] = self._executor.submit(self._build, name)
+
+    def _pump_retries(self) -> None:
+        """Re-park retries whose §16.3 backoff has elapsed on the clock."""
+        if not self._retry:
+            return
+        now = self._clock()
+        for name, (_attempts, due) in list(self._retry.items()):
+            if now >= due:
+                del self._retry[name]
+                if name not in self._entries:
+                    self._build_queue[name] = None
 
     def poll_builds(self) -> list:
         """Collect finished background builds without blocking: install
         each success into the LRU (move-to-end + shrink, exactly like a
         sync miss) and return ``[(name, art_or_None, exc_or_None), ...]``
-        for every build that finished since the last poll.  The artifact
-        is returned *alongside* installation because a same-poll
-        neighbour's install may immediately evict it (§14.3's
-        pin-during-build) — the caller holds the reference, not the LRU."""
+        for every build that reached a *terminal* outcome since the last
+        poll.  A transient failure with retry budget left (§16.3) is not
+        terminal: it is scheduled for a backoff retry and not reported.
+        The artifact is returned *alongside* installation because a
+        same-poll neighbour's install may immediately evict it (§14.3's
+        pin-during-build) — the caller holds the reference, not the
+        LRU."""
+        self._pump_retries()
         finished = [n for n, f in self._builds.items() if f.done()]
         out = []
         for name in finished:
@@ -599,12 +746,27 @@ class GraphCache:
             art = None
             if exc is None:
                 art = fut.result()
+                self._attempts.pop(name, None)
                 self._install(name, art)
+            else:
+                attempts = self._attempts.get(name, 1)
+                if (attempts <= self.build_retries
+                        and lifecycle_mod.classify_build_failure(exc)
+                        == "transient"):
+                    self.retries += 1
+                    self._retry[name] = (attempts, self._clock()
+                                         + lifecycle_mod.backoff_delay(
+                                             attempts, self.retry_backoff,
+                                             self.retry_backoff_cap))
+                    continue
+                self._attempts.pop(name, None)
             out.append((name, art, exc))
-        if not self._builds and self._executor is not None:
+        self._dispatch()
+        if (not self._builds and not self._build_queue
+                and self._executor is not None):
             # build set drained: drop the pool so a fleet of engines in
             # one process doesn't accumulate idle threads; the next
-            # start_build lazily re-creates it
+            # dispatch lazily re-creates it
             self._executor.shutdown(wait=False)
             self._executor = None
         return out
@@ -614,20 +776,59 @@ class GraphCache:
         ``timeout`` seconds elapse); False when none was in flight.
         Completions still need a :meth:`poll_builds` to install — this is
         the bounded sleep ``run()``-style drain loops use instead of
-        spinning (``step()`` itself never calls it)."""
+        spinning (``step()`` itself never calls it).  Event-driven: the
+        wait is on the build futures, so it returns the moment one
+        lands, not at the timeout."""
         if not self._builds:
             return False
         _futures_wait(list(self._builds.values()), timeout=timeout,
                       return_when=FIRST_COMPLETED)
         return True
 
+    def next_retry_in(self) -> float | None:
+        """Seconds (on the injectable clock) until the earliest §16.3
+        backoff elapses; <= 0 when one is already due, None when no
+        retry is pending.  Drain loops use this to sleep exactly as
+        long as needed instead of spinning."""
+        if not self._retry:
+            return None
+        return min(due for _a, due in self._retry.values()) - self._clock()
+
+    def kick_retries(self) -> None:
+        """Declare the earliest pending backoff elapsed and dispatch it
+        now.  The escape hatch for blocking drains under an *injected*
+        clock (§16.3): a drain loop that owns neither wall time nor the
+        fake clock would otherwise wait forever on a backoff that only
+        the test can advance.  ``step()``-driven pumping never calls
+        this, so clock-driven tests see exact backoff gating."""
+        if not self._retry:
+            return
+        name = min(self._retry, key=lambda n: self._retry[n][1])
+        del self._retry[name]
+        if name not in self._entries:
+            self._build_queue[name] = None
+        self._dispatch()
+
     @property
     def building(self) -> list[str]:
-        """Names whose artifact build is in flight on the background pool."""
-        return list(self._builds)
+        """Names whose artifact build is committed to the background
+        pool: in flight on a worker or parked for a slot (§16.5).
+        Backoff waiters are *not* here — see :attr:`retry_pending`."""
+        return list(self._builds) + list(self._build_queue)
+
+    @property
+    def retry_pending(self) -> list[str]:
+        """Names waiting out a §16.3 backoff before their next attempt."""
+        return list(self._retry)
 
     def build_in_flight(self, name: str) -> bool:
         return name in self._builds
+
+    def build_pending(self, name: str) -> bool:
+        """True while ``name``'s build is anywhere in the pipeline:
+        running, parked for a worker slot, or waiting out a backoff."""
+        return (name in self._builds or name in self._build_queue
+                or name in self._retry)
 
     def evict(self, name: str) -> bool:
         """Force ``name`` out of the cache now (listeners fire, the
@@ -698,6 +899,17 @@ class _TenantQueue:
         d.append(q)
         self._len += 1
 
+    def prepend(self, q: BfsQuery) -> None:
+        """Re-queue ``q`` at the *front* of its tenant's deque — the
+        §16.4 degradation path returns in-flight work to the queue
+        without sending it to the back of the line."""
+        d = self._by_tenant.get(q.tenant)
+        if d is None:
+            self.append(q)
+            return
+        d.appendleft(q)
+        self._len += 1
+
     def popleft(self) -> BfsQuery:
         if not self._len:
             raise IndexError("pop from an empty _TenantQueue")
@@ -728,6 +940,20 @@ class _TenantQueue:
 
     def __iter__(self):
         return itertools.chain.from_iterable(self._by_tenant.values())
+
+    def remove_rid(self, rid: int) -> BfsQuery | None:
+        """Withdraw the queued request with id ``rid`` (§16.2
+        cancellation); None when not queued here.  O(queue length) — a
+        cancel is rare next to the per-pop hot path, which stays O(1).
+        A drained tenant's empty deque is left for ``popleft``'s
+        existing retire-on-empty handling."""
+        for d in self._by_tenant.values():
+            for q in d:
+                if q.rid == rid:
+                    d.remove(q)
+                    self._len -= 1
+                    return q
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -1308,11 +1534,55 @@ class _GraphSession:
     def in_flight(self) -> int:
         return sum(q is not None for q in self.lanes)
 
+    # ---- cancel / deadline reclamation at window boundaries (§16.2) -------
+    def _reclaim_lanes(self) -> None:
+        """Free lanes whose request was cancelled or whose deadline
+        passed, at a megatick window boundary (= between ticks — a
+        window is one tick, so this is exactly the §11.1 boundary).
+        The lane's column is wiped via the reseed clear (bitwise lane
+        independence keeps the other lanes exact) and the lane returns
+        to the free set for this very tick's admission refill."""
+        eng = self.engine
+        kappa = eng.kappa
+        stale: list[int] = []
+        now = None
+        for i, q in enumerate(self.lanes):
+            if q is None:
+                continue
+            t = eng._tickets.get(q.rid)
+            if t is None:
+                continue
+            if t.cancel_requested:
+                eng._finish_cancel(t)
+                stale.append(i)
+            elif t.deadline_at is not None:
+                if now is None:
+                    now = eng._clock()
+                if now > t.deadline_at:
+                    eng._tickets.pop(q.rid, None)
+                    eng._shed_expired(t, now, where="window boundary",
+                                      deliver=True)
+                    stale.append(i)
+        if not stale:
+            return
+        for i in stale:
+            self.lanes[i] = None
+            self.wl[i] = None
+            self.accs[i] = None
+            self.watch_ids[i] = -1
+        self.meta_dev = None
+        self.watch_dev = None
+        clear = np.zeros(kappa, bool)
+        clear[stale] = True
+        self.state = self.runner.reseed(
+            self.state, clear, np.full(kappa, -1, np.int32), self.ell)
+
     # ---- one scheduling tick ----------------------------------------------
     def tick(self) -> None:
         eng = self.engine
         runner, art, kappa = self.runner, self.art, eng.kappa
         queue, lanes = self.queue, self.lanes
+        self._reclaim_lanes()
         # ---- admission: refill free lanes from the queue -----------------
         free = [i for i in range(kappa) if lanes[i] is None]
         if free and queue:
@@ -1322,9 +1592,16 @@ class _GraphSession:
             new_src = np.full(kappa, -1, np.int32)
             now = eng._clock()
             for i in free:
-                if not queue:
+                q = None
+                # §16.1 seeding-time check: pop until a request that can
+                # still make its deadline (expired ones shed here)
+                while queue:
+                    cand = queue.popleft()
+                    if eng._seed_ok(cand, now):
+                        q = cand
+                        break
+                if q is None:
                     break
-                q = queue.popleft()
                 wl = eng._workloads[q.kind]
                 lanes[i] = q
                 self.wl[i] = wl
@@ -1632,7 +1909,10 @@ class BfsEngine:
                  overload: str = "reject",
                  tenant_weights: dict[str, int] | None = None,
                  build_fault_hook=None,
-                 clock=None):
+                 clock=None,
+                 build_retries: int = 0,
+                 build_backoff: float = 0.05,
+                 build_backoff_cap: float = 2.0):
         if kappa % 32 != 0 or kappa <= 0:
             raise ValueError("kappa must be a positive multiple of 32")
         if layout not in LAYOUTS:
@@ -1682,8 +1962,16 @@ class BfsEngine:
         self.tenant_weights = ({k: int(v) for k, v in tenant_weights.items()}
                                if tenant_weights else None)
         # injectable clock (§14): every ticket timestamp and queue-wait
-        # stat flows through this, so tests pin exact latency values
+        # stat flows through this, so tests pin exact latency values.
+        # _wall_clock gates the §16.3 drain-loop sleeps: under an
+        # injected clock the engine never wall-sleeps on its behalf.
         self._clock = time.monotonic if clock is None else clock
+        self._wall_clock = clock is None
+        # §16.1 EWMA service-time model behind submit(deadline=)'s
+        # predicted-violation shedding, and the §16.4 degradation
+        # registry: (graph, layout) -> quarantine cause
+        self._slo = lifecycle_mod.ServiceTimeModel()
+        self._quarantine: dict[tuple[str, str], str] = {}
         # per-engine snapshot of the workload registry: register_workload
         # extends this engine alone, workloads.register the module default
         self._workloads = (dict(workloads) if workloads is not None
@@ -1708,8 +1996,16 @@ class BfsEngine:
                                 probe_runner=self._make_probe_runner,
                                 mma_tiles=self._mma_tiles,
                                 builders=max(1, self.build_workers),
-                                fault_hook=build_fault_hook)
+                                fault_hook=build_fault_hook,
+                                build_retries=build_retries,
+                                retry_backoff=build_backoff,
+                                retry_backoff_cap=build_backoff_cap,
+                                clock=self._clock)
         self.cache.on_evict(self._drop_runner)
+        # §16.5: dispatch parked builds by queued depth, not FIFO — the
+        # build that unblocks the most waiting tickets runs first
+        self.cache.build_priority = (
+            lambda name: len(self._queues.get(name) or ()))
         self._runners: dict[str, _LaneRunner] = {}
         # per-graph workload state (DESIGN.md §15.2): graph name ->
         # {kind: Workload.graph_state(graph)}, built lazily on the first
@@ -1748,6 +2044,8 @@ class BfsEngine:
             "ticks": 0, "session_switches": 0, "max_live_sessions": 0,
             "builds": 0, "build_failures": 0,
             "rejected": 0, "deferred": 0,
+            "expired": 0, "cancelled": 0,
+            "deadline_misses": 0, "degraded": 0,
         }
 
     # ---- registration / admission -----------------------------------------
@@ -1785,7 +2083,8 @@ class BfsEngine:
 
     def submit(self, graph: str, source: int, kind: str = KIND_BFS,
                *, target: int | None = None,
-               tenant: str = "default") -> Ticket:
+               tenant: str = "default",
+               deadline: float | None = None) -> Ticket:
         """Enqueue one request; returns a :class:`Ticket` (int-compatible
         request id + completion handle).  Legal at any time — between
         ``step()`` calls the request joins the graph's live session
@@ -1796,7 +2095,17 @@ class BfsEngine:
         ``BUILDING``.  Over the §14.2 queue-depth caps the request is
         shed instead of queued — a terminal ``REJECTED`` ticket under
         ``overload='reject'`` (the engine forgets it immediately), or a
-        deferred one promoted later under ``'defer'``."""
+        deferred one promoted later under ``'defer'``.
+
+        ``deadline`` (relative seconds, §16.1) makes shedding SLO-aware
+        instead of purely depth-based: when the EWMA service model
+        predicts this request cannot complete inside its budget given
+        the backlog ahead of it, it is shed *now* as a terminal
+        ``EXPIRED`` ticket (like ``REJECTED``, never delivered through
+        ``step()``) — shedding the predicted violator at submission is
+        strictly cheaper than queueing it to miss.  The deadline is
+        re-checked at lane seeding and at every window boundary; a cold
+        model always admits."""
         if not self.cache.is_registered(graph):
             raise KeyError(f"graph {graph!r} not registered")
         wl = self._workloads.get(kind)
@@ -1806,13 +2115,28 @@ class BfsEngine:
         g = self.cache.graph(graph)
         if not 0 <= source < g.n:
             raise ValueError(f"source {source} out of range for {graph!r}")
+        if deadline is not None:
+            deadline = float(deadline)
+            if deadline <= 0:
+                raise ValueError(f"deadline must be > 0 s, got {deadline}")
         rid = next(self._rids)
         q = BfsQuery(rid=rid, graph=graph, source=int(source), kind=kind,
                      target=None if target is None else int(target),
                      tenant=str(tenant))
         wl.validate(q, g)
-        ticket = Ticket(rid, self, q)
+        ticket = Ticket(rid, self, q, deadline)
         self.stats["queries"] += 1
+        if ticket.deadline_at is not None:
+            depth = len(self._queues.get(graph) or ())
+            pred = self._slo.predict_latency(graph, kind, depth, self.kappa)
+            if (pred is not None
+                    and ticket.submitted_at + pred > ticket.deadline_at):
+                self._shed_expired(
+                    ticket, ticket.submitted_at, where="admission",
+                    deliver=False,
+                    cause=(f"predicted latency {pred:.4f}s exceeds the "
+                           f"{deadline}s deadline at queue depth {depth}"))
+                return ticket
         if self._over_capacity(graph):
             if self.overload == "reject":
                 ticket.state = TicketState.REJECTED
@@ -1823,6 +2147,8 @@ class BfsEngine:
                 ticket.completed_at = ticket.submitted_at
                 self.stats["rejected"] += 1
                 key = f"rejected:{graph}"
+                self.stats[key] = self.stats.get(key, 0) + 1
+                key = f"shed_tenant:{q.tenant}"
                 self.stats[key] = self.stats.get(key, 0) + 1
                 return ticket
             self._tickets[rid] = ticket
@@ -1884,7 +2210,7 @@ class BfsEngine:
             except Exception as e:  # noqa: BLE001 — any build error
                 self._fail_graph(name, e)
             return
-        if not self.cache.build_in_flight(name):
+        if not self.cache.build_pending(name):
             self.cache.start_build(name)
             self.stats["builds"] += 1
             for pending_q in self._queues.get(name) or ():
@@ -1913,17 +2239,37 @@ class BfsEngine:
                         t.state = TicketState.QUEUED
 
     def _promote_deferred(self) -> None:
-        """Re-admit deferred arrivals (overload='defer') in FIFO order
-        while the §14.2 caps allow; the rest keep waiting."""
+        """Re-admit deferred arrivals (overload='defer') while the §14.2
+        caps allow — earliest deadline first (§16.1 EDF), submission
+        order among deadline-free requests (the sort is stable, so the
+        pre-§16 FIFO behaviour is unchanged when nobody sets
+        deadlines).  Deferred requests whose deadline has already
+        passed are shed here instead of promoted — the window-boundary
+        check for work that never reached a queue."""
         if not self._deferred:
             return
+        now = self._clock()
+
+        def urgency(q: BfsQuery) -> float:
+            t = self._tickets.get(q.rid)
+            if t is None or t.deadline_at is None:
+                return float("inf")
+            return t.deadline_at
+
         held: deque[BfsQuery] = deque()
-        while self._deferred:
-            q = self._deferred.popleft()
+        for q in sorted(self._deferred, key=urgency):
+            t = self._tickets.get(q.rid)
+            if t is None:
+                continue  # cancelled under us; already terminal
+            if t.deadline_at is not None and now > t.deadline_at:
+                self._tickets.pop(q.rid, None)
+                self._shed_expired(t, now, where="deferred promotion",
+                                  deliver=True)
+                continue
             if self._over_capacity(q.graph):
                 held.append(q)
                 continue
-            self._enqueue(q, self._tickets.get(q.rid))
+            self._enqueue(q, t)
         self._deferred = held
 
     def _fail_graph(self, name: str, exc: BaseException) -> None:
@@ -1951,22 +2297,98 @@ class BfsEngine:
             t.completed_at = now
             self._completed.append(t)
 
+    # ---- per-graph graceful degradation (§16.4) ----------------------------
+    def _quarantine_pair(self, name: str, layout: str, why: str) -> None:
+        """Record one (graph, layout) quarantine: ``_resolve_layout``
+        falls back to the base layout for the pair from now on."""
+        if (name, layout) not in self._quarantine:
+            self._quarantine[(name, layout)] = why
+            self.stats["degraded"] += 1
+
+    def _note_degraded(self, art: GraphArtifacts) -> None:
+        """Adopt a build-time degradation (§16.4): MMA tile prep raised
+        inside ``build_artifacts``, so the artifact landed without tiles —
+        quarantine (graph, 'mma') so health() shows it and a forced
+        ``layout='mma'`` engine serves the base layout instead of
+        crashing the session open."""
+        if art.degraded:
+            self._quarantine_pair(art.name, "mma", art.degraded)
+
+    def _handle_session_fault(self, name: str, sess: "_GraphSession",
+                              exc: BaseException) -> None:
+        """A session tick raised (§16.4).  On a non-base layout:
+        quarantine (graph, layout), drop the compiled runner, and put the
+        in-flight requests back at the *front* of the graph's queue — a
+        fresh session re-opens on the base layout next step and re-runs
+        them from scratch (lanes restart, results stay oracle-exact), so
+        no ticket fails.  Base-layout faults never reach here: the
+        caller re-raises them — there is nothing left to fall back to,
+        and §15.3 extract validation must stay loud."""
+        self._sessions.pop(name, None)
+        was_head = self._rotation and self._rotation[0] == name
+        if name in self._rotation:
+            self._rotation.remove(name)
+        if was_head and self._rotation:
+            self._quantum_left = self._weight(self._rotation[0])
+        in_flight = [q for q in sess.lanes if q is not None]
+        lay = self._resolve_layout(sess.art)
+        self._drop_runner(name)
+        self._quarantine_pair(name, lay, f"session tick raised: {exc!r}")
+        queue = self._queues.get(name)
+        if queue is None:
+            queue = self._queues[name] = _TenantQueue(self.tenant_weights)
+        for q in reversed(in_flight):
+            t = self._tickets.get(q.rid)
+            if t is None:
+                continue
+            if t.cancel_requested:
+                self._finish_cancel(t)
+                continue
+            t.state = TicketState.QUEUED
+            t.admitted_at = None
+            queue.prepend(q)
+
     def _idle_wait(self, timeout: float = 0.05) -> None:
-        """Bounded block for an in-flight background build when a drain
-        loop (``run()`` / ``Ticket.result()``) has nothing else to do —
-        ``step()`` itself never calls this, so pumping stays
-        non-blocking."""
-        if not self._sessions and not self._completed:
-            self.cache.wait_builds(timeout=timeout)
+        """Bounded wait when a drain loop (``run()`` /
+        ``Ticket.result()``) has nothing else to do — ``step()`` itself
+        never calls this, so pumping stays non-blocking.  Event- and
+        clock-driven, never a fixed sleep (the pre-§16 version
+        wall-blocked a hard-coded 0.05 s even under a fake clock):
+
+        * a build in flight → wait on its future (returns the moment it
+          lands, ``timeout`` cap);
+        * only a §16.3 backoff pending → wall clocks sleep exactly
+          ``min(remaining, timeout)``; injected clocks *kick* the retry
+          instead (a blocking drain can advance neither wall time nor a
+          fake clock, so the backoff is declared elapsed) and return
+          immediately — fake-clock drains never wall-block;
+        * nothing pending → return immediately."""
+        if self._sessions or self._completed:
+            return
+        if self.cache.wait_builds(timeout=timeout):
+            return
+        self._retry_nap(timeout)
+
+    def _retry_nap(self, cap: float) -> None:
+        """Wait out (wall clock) or kick (injected clock, §16.3) the
+        earliest pending build retry; no-op when none is pending."""
+        due_in = self.cache.next_retry_in()
+        if due_in is None or due_in <= 0:
+            return
+        if self._wall_clock:
+            time.sleep(min(due_in, cap))
+        else:
+            self.cache.kick_retries()
 
     def _await_builds(self) -> None:
-        """Block until no *queued* graph's artifact build is in flight —
+        """Block until no *queued* graph's artifact build is pending —
         ``run()``'s pre-pass.  ``run()`` drains everything anyway (it was
         the synchronous-build path before §14), so waiting here restores
         its deterministic all-ready drain — every queued graph's session
         opens on the first step — without touching the non-blocking
         ``step()`` contract.  Builds for graphs nothing is queued on are
-        not waited for."""
+        not waited for; §16.3 backoff waits are slept out (wall clock)
+        or kicked (injected clock) like ``_idle_wait``."""
         while True:
             self._poll_builds()
             self._promote_deferred()
@@ -1974,9 +2396,10 @@ class BfsEngine:
                        if q and n not in self.cache and n not in self._built]
             for n in waiting:
                 self._ensure_build(n)
-            if not any(self.cache.build_in_flight(n) for n in waiting):
+            if not any(self.cache.build_pending(n) for n in waiting):
                 return
-            self.cache.wait_builds(timeout=0.2)
+            if not self.cache.wait_builds(timeout=0.2):
+                self._retry_nap(0.2)
 
     # ---- serving ----------------------------------------------------------
     def step(self) -> list[Ticket]:
@@ -1996,14 +2419,20 @@ class BfsEngine:
         if self._sessions:
             name = self._schedule()
             sess = self._sessions[name]
-            sess.tick()
-            self.stats["ticks"] += 1
-            if (self._last_scheduled not in (None, name)
-                    and len(self._sessions) > 1):
-                self.stats["session_switches"] += 1
-            self._last_scheduled = name
-            if sess.idle:
-                self._close_session(name)
+            try:
+                sess.tick()
+            except Exception as exc:  # noqa: BLE001 — §16.4 degradation
+                if self._resolve_layout(sess.art) == self._base_layout():
+                    raise  # nothing to fall back to; stay loud (§15.3)
+                self._handle_session_fault(name, sess, exc)
+            else:
+                self.stats["ticks"] += 1
+                if (self._last_scheduled not in (None, name)
+                        and len(self._sessions) > 1):
+                    self.stats["session_switches"] += 1
+                self._last_scheduled = name
+                if sess.idle:
+                    self._close_session(name)
         done, self._completed = self._completed, []
         return done
 
@@ -2086,8 +2515,18 @@ class BfsEngine:
             if name not in self.cache:
                 return
             art = self.cache.get(name)
-        self._sessions[name] = _GraphSession(
-            self, name, self._queues[name], art)
+        self._note_degraded(art)
+        try:
+            sess = _GraphSession(self, name, self._queues[name], art)
+        except Exception as exc:  # noqa: BLE001 — §16.4 degradation
+            lay = self._resolve_layout(art)
+            if lay == self._base_layout():
+                raise  # nothing to fall back to; stay loud
+            self._quarantine_pair(name, lay,
+                                  f"session open raised: {exc!r}")
+            self._drop_runner(name)
+            sess = _GraphSession(self, name, self._queues[name], art)
+        self._sessions[name] = sess
         self._rotation.append(name)
         if len(self._rotation) == 1:
             self._quantum_left = self._weight(name)
@@ -2135,22 +2574,147 @@ class BfsEngine:
             t._result = res
             t.state = TicketState.DONE
             t.completed_at = self._clock()
+            if t.admitted_at is not None:
+                # §16.1: feed the EWMA predictor the lane service time
+                # (admission -> completion; queue wait excluded)
+                self._slo.observe(q.graph, q.kind,
+                                  t.completed_at - t.admitted_at)
+            if t.deadline_at is not None and t.completed_at > t.deadline_at:
+                self.stats["deadline_misses"] += 1
             self._completed.append(t)
         if self.keep_results:
             self.results[q.rid] = res
 
+    # ---- deadline / cancellation lifecycle (§16.1, §16.2) ------------------
+    def _shed_expired(self, t: Ticket, now: float, *, where: str,
+                      deliver: bool, cause: str | None = None) -> None:
+        """Move ``t`` to terminal ``EXPIRED``.  ``deliver=False`` is the
+        submission-time shed (the ticket never entered the engine, so —
+        like ``REJECTED`` — it is not delivered through ``step()``);
+        later sheds deliver exactly once."""
+        t.state = TicketState.EXPIRED
+        t.error = (cause or
+                   f"deadline of {t.deadline}s exceeded") + f" ({where})"
+        t.completed_at = now
+        self.stats["expired"] += 1
+        key = f"shed_tenant:{t.query.tenant}"
+        self.stats[key] = self.stats.get(key, 0) + 1
+        if deliver:
+            self._completed.append(t)
+
+    def _seed_ok(self, q: BfsQuery, now: float) -> bool:
+        """The §16.1 lane-seeding check: False sheds the request instead
+        of seeding it — its deadline has already passed, or the EWMA
+        service estimate says the lane cannot finish inside it (the
+        queueing term is gone here; only service time remains)."""
+        t = self._tickets.get(q.rid)
+        if t is None:
+            return False  # defensively skip a ghost entry
+        if t.deadline_at is None:
+            return True
+        srv = self._slo.service(q.graph, q.kind)
+        if now > t.deadline_at or (srv is not None
+                                   and now + srv > t.deadline_at):
+            self._tickets.pop(q.rid, None)
+            self._shed_expired(t, now, where="lane seeding", deliver=True)
+            return False
+        return True
+
+    def _cancel(self, t: Ticket) -> bool:
+        """``Ticket.cancel``'s engine side (§16.2)."""
+        if t.done():
+            return False
+        if t.cancel_requested:
+            return True  # idempotent: already headed for CANCELLED
+        q = t.query
+        if t.state == TicketState.RUNNING:
+            # in a lane: reclaimed at the session's next window boundary
+            # (_GraphSession._reclaim_lanes); a megatick window in
+            # progress is never interrupted mid-dispatch
+            t.cancel_requested = True
+            return True
+        # waiting (QUEUED/BUILDING, queued or deferred): free it now
+        queue = self._queues.get(q.graph)
+        removed = queue.remove_rid(q.rid) if queue is not None else None
+        if removed is None:
+            for d in self._deferred:
+                if d.rid == q.rid:
+                    self._deferred.remove(d)
+                    break
+        self._tickets.pop(q.rid, None)
+        # an emptied queue with no live session would linger (sessions
+        # normally own queue teardown); drop it so state stays tidy
+        if (queue is not None and not queue
+                and q.graph not in self._sessions
+                and self._queues.get(q.graph) is queue):
+            self._queues.pop(q.graph, None)
+        self._finish_cancel(t)
+        return True
+
+    def _finish_cancel(self, t: Ticket) -> None:
+        """Terminal-ize a cancellation: CANCELLED, delivered exactly
+        once through ``step()`` like every in-engine terminal."""
+        self._tickets.pop(t.query.rid, None)
+        t.state = TicketState.CANCELLED
+        t.error = f"request {int(t)} cancelled by caller"
+        t.completed_at = self._clock()
+        self.stats["cancelled"] += 1
+        self._completed.append(t)
+
+    # ---- health snapshot (§16.4) -------------------------------------------
+    def health(self) -> lifecycle_mod.EngineHealth:
+        """One self-contained operator snapshot of the lifecycle layer:
+        queue depths, deferred/in-flight occupancy, builds in every
+        pipeline stage, shed/expiry/cancel/miss counters, the §16.4
+        degradation registry, and the EWMA service-time estimates."""
+        return lifecycle_mod.EngineHealth(
+            queue_depths={n: len(qq) for n, qq in self._queues.items()
+                          if len(qq)},
+            deferred=len(self._deferred),
+            in_flight=self.in_flight,
+            live_sessions=list(self._sessions),
+            building=self.cache.building,
+            retry_pending=self.cache.retry_pending,
+            build_retries=self.cache.retries,
+            build_failures=self.stats["build_failures"],
+            rejected=self.stats["rejected"],
+            expired=self.stats["expired"],
+            cancelled=self.stats["cancelled"],
+            deadline_misses=self.stats["deadline_misses"],
+            degraded={f"{n}:{lay}": why
+                      for (n, lay), why in sorted(self._quarantine.items())},
+            tenant_shed={k.split(":", 1)[1]: v
+                         for k, v in sorted(self.stats.items())
+                         if k.startswith("shed_tenant:")},
+            service_times=self._slo.snapshot(),
+        )
+
     # ---- per-graph runners / probe adoption --------------------------------
+    def _base_layout(self) -> str:
+        """The backend-default substrate every graph can always fall back
+        to (§16.4): packed uint32 on TPU, uint8 byteplanes elsewhere —
+        the layouts with no per-graph prep step that can fail."""
+        return "packed" if jax.default_backend() == "tpu" else "byteplane"
+
     def _resolve_layout(self, art: GraphArtifacts) -> str:
         """The layout this graph is actually served with: forced layouts
         pass through; 'auto' consults the probe's ``dense_layout`` verdict
-        (§13.4) when tiles were probed, else the backend default."""
+        (§13.4) when tiles were probed, else the backend default.  A
+        (graph, layout) pair quarantined by §16.4 degradation resolves to
+        the base layout instead — bit-identical results, no fast path."""
+        base = self._base_layout()
         if self.layout != "auto":
-            return self.layout
-        sw = art.switching
-        if (sw is not None and sw.dense_layout == "mma"
-                and art.mma is not None):
-            return "mma"
-        return "packed" if jax.default_backend() == "tpu" else "byteplane"
+            lay = self.layout
+        else:
+            sw = art.switching
+            if (sw is not None and sw.dense_layout == "mma"
+                    and art.mma is not None):
+                lay = "mma"
+            else:
+                lay = base
+        if lay != base and (art.name, lay) in self._quarantine:
+            return base
+        return lay
 
     def _make_probe_runner(self, bd: BvssDevice, tiles=None):
         """Probe-runner factory handed to :class:`GraphCache`: the base

@@ -270,9 +270,10 @@ def test_global_queue_cap(duo):
     assert sorted(res) == [int(t1), int(t2)]
 
 
-def test_terminal_states_are_exactly_three():
+def test_terminal_states_are_exactly_five():
     assert TicketState.TERMINAL == {
-        TicketState.DONE, TicketState.REJECTED, TicketState.FAILED}
+        TicketState.DONE, TicketState.REJECTED, TicketState.FAILED,
+        TicketState.EXPIRED, TicketState.CANCELLED}
 
 
 # ------------------------------------------- eviction racing the builder --

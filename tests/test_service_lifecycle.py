@@ -1,0 +1,561 @@
+"""Deadline-aware request lifecycle (DESIGN.md §16): SLO shedding via
+the EWMA service-time model (EXPIRED at admission / lane seeding /
+window boundaries), ``ticket.cancel()`` for waiting and in-flight
+requests, transient-vs-permanent build-failure classification with
+capped exponential backoff retries on the injectable clock, per-graph
+graceful degradation to the base layout, the ``engine.health()``
+snapshot, EDF deferred promotion, depth-prioritized build dispatch, and
+the event-driven ``_idle_wait`` regression."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ref_bfs
+from repro.data import graphs
+from repro.serve import workloads
+from repro.serve.bfs_engine import (
+    BfsEngine, GraphCache, TicketCancelled, TicketExpired, TicketState,
+    _LaneRunner)
+from repro.serve.lifecycle import (
+    PermanentBuildError, ScriptedFaults, ServiceTimeModel,
+    TransientBuildError, backoff_delay, classify_build_failure)
+
+from test_service_hardening import (
+    FakeClock, GatedBuild, TIMEOUT_S, _drain, _engine, _pump_until)
+from workload_matrix import QUERY_FACTORIES, matrix_graphs
+
+UNREACHED = ref_bfs.UNREACHED
+
+
+def _pump_builds(eng, timeout=TIMEOUT_S):
+    """One step (dispatching any due §16.3 retry), then step() until no
+    build *future* is in flight.  Unlike ``_idle_wait``-driven drains
+    this never kicks a backoff, so tests observe the exact clock
+    gating."""
+    t0 = time.monotonic()
+    eng.step()
+    while eng.cache._builds:
+        eng.cache.wait_builds(timeout=0.2)
+        eng.step()
+        assert time.monotonic() - t0 < timeout, "build pump timed out"
+
+
+@pytest.fixture(scope="module")
+def duo():
+    return {
+        "kron": graphs.make("kron", scale=6, seed=0),
+        "ring": graphs.make("ring", scale=5),
+    }
+
+
+# ------------------------------------------------ policy units (§16.1/3) --
+def test_classify_build_failure():
+    assert classify_build_failure(TransientBuildError("x")) == "transient"
+    assert classify_build_failure(PermanentBuildError("x")) == "permanent"
+    # spec/programming errors: an identical retry cannot help
+    for exc in (ValueError("v"), TypeError("t"), KeyError("k"),
+                IndexError("i"), AttributeError("a"), NotImplementedError()):
+        assert classify_build_failure(exc) == "permanent"
+    # environment-shaped errors presume transient
+    for exc in (RuntimeError("r"), OSError("o"), MemoryError()):
+        assert classify_build_failure(exc) == "transient"
+
+
+def test_backoff_delay_is_capped_exponential():
+    assert backoff_delay(1, 0.5, 8.0) == 0.5
+    assert backoff_delay(2, 0.5, 8.0) == 1.0
+    assert backoff_delay(4, 0.5, 8.0) == 4.0
+    assert backoff_delay(10, 0.5, 8.0) == 8.0  # capped
+    with pytest.raises(ValueError):
+        backoff_delay(0, 0.5, 8.0)
+
+
+def test_service_time_model_fallbacks_and_prediction():
+    m = ServiceTimeModel(alpha=0.5)
+    assert m.service("g", "bfs") is None
+    assert m.predict_latency("g", "bfs", 4, 32) is None  # cold: admit
+    m.observe("g", "bfs", 1.0)
+    assert m.service("g", "bfs") == 1.0
+    m.observe("g", "bfs", 3.0)
+    assert m.service("g", "bfs") == pytest.approx(2.0)  # EWMA, alpha=.5
+    # cold (graph, kind) falls back per-graph, then globally
+    assert m.service("g", "cc") == pytest.approx(2.0)
+    assert m.service("other", "bfs") == pytest.approx(2.0)
+    # queueing term: depth/kappa extra service times
+    assert m.predict_latency("g", "bfs", 32, 32) == pytest.approx(4.0)
+    assert m.snapshot() == {"g/bfs": pytest.approx(2.0)}
+    # a legitimate 0.0 estimate (fake clocks) is not 'cold'
+    z = ServiceTimeModel()
+    z.observe("g", "bfs", 0.0)
+    assert z.service("g", "bfs") == 0.0
+    assert z.predict_latency("g", "bfs", 8, 32) == 0.0
+
+
+def test_scripted_faults_sequences():
+    sf = ScriptedFaults({"g": [TransientBuildError("1"), None,
+                               PermanentBuildError("3")]})
+    with pytest.raises(TransientBuildError):
+        sf("g")
+    sf("g")  # None: passes
+    with pytest.raises(PermanentBuildError):
+        sf("g")
+    sf("g")  # exhausted script never faults
+    sf("other")  # absent script never faults
+    assert sf.calls == {"g": 4, "other": 1}
+    assert sf.order == ["g", "g", "g", "g", "other"]
+
+
+# ------------------------------------------------ deadlines (§16.1) -------
+def test_submit_rejects_bad_deadline(duo):
+    eng = _engine(build_workers=0)
+    eng.register_graph("g", duo["kron"])
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit("g", 0, deadline=0.0)
+
+
+def test_cold_model_always_admits(duo):
+    clock = FakeClock()
+    eng = _engine(clock=clock, build_workers=0)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0, deadline=1e-9)  # absurd SLO, but no estimate yet
+    assert t.state == TicketState.QUEUED
+    assert t.result() is not None  # static clock: deadline never passes
+    assert eng.stats["deadline_misses"] == 0
+
+
+def test_predicted_violation_sheds_at_admission(duo):
+    clock = FakeClock()
+    eng = _engine(clock=clock, build_workers=0)
+    eng.register_graph("g", duo["kron"])
+    # warm the model: one request whose lane visibly takes 2.0s
+    warm = eng.submit("g", 0)
+    eng.step()  # seeds the lane
+    assert warm.state == TicketState.RUNNING
+    clock.advance(2.0)
+    _pump_until(eng, warm.done)
+    assert eng._slo.service("g", "bfs") == pytest.approx(2.0)
+
+    t = eng.submit("g", 1, deadline=1.0)  # predicted 2.0 > 1.0 budget
+    assert t.state == TicketState.EXPIRED and t.done()
+    assert "predicted latency" in t.error and "admission" in t.error
+    with pytest.raises(TicketExpired):
+        t.result()
+    # like REJECTED, never delivered through step()
+    assert _drain(eng) == []
+    assert eng.stats["expired"] == 1
+    assert eng.health().tenant_shed == {"default": 1}
+    # a generous deadline admits against the same model
+    t2 = eng.submit("g", 1, deadline=50.0)
+    assert t2.state == TicketState.QUEUED
+    assert t2.result() is not None
+
+
+def test_deadline_expired_before_seeding_is_shed(duo):
+    clock = FakeClock()
+    eng = _engine(clock=clock, build_workers=0)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0, deadline=1.0)
+    clock.advance(5.0)  # budget gone before any lane seeds it
+    out = _drain(eng)
+    assert out == [t]  # delivered exactly once
+    assert t.state == TicketState.EXPIRED
+    assert "lane seeding" in t.error
+    assert eng.in_flight == 0
+
+
+def test_in_flight_deadline_reclaimed_at_window_boundary(duo):
+    clock = FakeClock()
+    eng = _engine(clock=clock, build_workers=0)
+    eng.register_graph("g", duo["ring"])  # high diameter: many ticks
+    doomed = eng.submit("g", 0, deadline=1.0)
+    control = eng.submit("g", 1)
+    eng.step()
+    assert doomed.state == TicketState.RUNNING
+    assert eng.in_flight == 2
+    clock.advance(5.0)
+    out = _drain(eng)
+    assert sorted(out, key=int) == [doomed, control]
+    assert doomed.state == TicketState.EXPIRED
+    assert "window boundary" in doomed.error
+    # the survivor's lane was untouched by the reclaim wipe
+    assert (control.result().levels
+            == ref_bfs.bfs_levels(duo["ring"], 1)).all()
+    assert eng.stats["expired"] == 1
+
+
+# ------------------------------------------------ cancellation (§16.2) ----
+def test_cancel_building_ticket_is_immediate(duo):
+    gate = GatedBuild({"g"})
+    eng = _engine(build_fault_hook=gate)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0)
+    assert t.state == TicketState.BUILDING
+    assert t.cancel() is True
+    assert t.state == TicketState.CANCELLED and t.done()
+    with pytest.raises(TicketCancelled):
+        t.result()
+    assert t.cancel() is False  # terminal: nothing to cancel
+    gate.release.set()
+    # the cancel notification arrives through step() exactly once
+    out = _drain(eng)
+    assert out == [t]
+    assert eng.stats["cancelled"] == 1
+
+
+def test_cancel_deferred_ticket(duo):
+    eng = _engine(build_workers=0, overload="defer", max_queue=1)
+    eng.register_graph("g", duo["kron"])
+    first = eng.submit("g", 0)
+    deferred = eng.submit("g", 1)
+    assert len(eng._deferred) == 1
+    assert deferred.cancel() is True
+    assert deferred.state == TicketState.CANCELLED
+    assert not eng._deferred
+    out = _drain(eng)
+    assert set(out) == {first, deferred}
+    assert first.state == TicketState.DONE
+
+
+def test_cancel_in_flight_lane_preserves_neighbours(duo):
+    eng = _engine(build_workers=0)
+    eng.register_graph("g", duo["ring"])
+    doomed = eng.submit("g", 0)
+    control = eng.submit("g", 1)
+    eng.step()
+    assert doomed.state == TicketState.RUNNING
+    assert doomed.cancel() is True
+    # still RUNNING: the lane frees at the next window boundary
+    assert doomed.state == TicketState.RUNNING and doomed.cancel_requested
+    assert eng.in_flight == 2
+    out = _drain(eng)
+    assert sorted(out, key=int) == [doomed, control]
+    assert doomed.state == TicketState.CANCELLED
+    assert (control.result().levels
+            == ref_bfs.bfs_levels(duo["ring"], 1)).all()
+    assert eng.in_flight == 0 and eng.stats["cancelled"] == 1
+
+
+def test_cancel_queued_drops_lingering_queue(duo):
+    eng = _engine(build_workers=0)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0)
+    assert t.cancel() is True
+    assert "g" not in eng._queues  # no session: queue tidied away
+    assert _drain(eng) == [t]
+
+
+# --------------------------------------- build retries / backoff (§16.3) --
+def test_async_flaky_build_retries_with_exact_backoff(duo):
+    clock = FakeClock()
+    faults = ScriptedFaults({"g": [TransientBuildError("flaky 1"),
+                                   TransientBuildError("flaky 2"), None]})
+    eng = _engine(clock=clock, build_fault_hook=faults, build_retries=2,
+                  build_backoff=1.0, build_backoff_cap=8.0)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0)
+    _pump_builds(eng)  # attempt 1 fails -> backoff, not FAILED
+    assert t.state == TicketState.BUILDING
+    assert faults.calls["g"] == 1
+    assert eng.cache.retry_pending == ["g"]
+    assert eng.cache.next_retry_in() == pytest.approx(1.0)
+    for _ in range(3):  # backoff not elapsed: no redispatch
+        eng.step()
+    assert faults.calls["g"] == 1
+
+    clock.advance(1.0)
+    _pump_builds(eng)  # attempt 2 fails -> doubled backoff
+    assert faults.calls["g"] == 2
+    assert eng.cache.next_retry_in() == pytest.approx(2.0)
+
+    clock.advance(2.0)
+    _pump_builds(eng)  # attempt 3 succeeds
+    assert faults.calls["g"] == 3
+    assert not eng.cache.retry_pending
+    out = _drain(eng)
+    assert out == [t] and t.state == TicketState.DONE
+    assert eng.stats["build_failures"] == 0
+    assert eng.cache.retries == 2
+    assert (t.result().levels == ref_bfs.bfs_levels(duo["kron"], 0)).all()
+
+
+def test_permanent_build_failure_fails_fast(duo):
+    faults = ScriptedFaults({"g": [ValueError("wrong spec")]})
+    eng = _engine(build_fault_hook=faults, build_retries=3)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0)
+    out = _drain(eng)
+    assert out == [t] and t.state == TicketState.FAILED
+    assert faults.calls["g"] == 1  # no retry burned on a permanent error
+    assert eng.stats["build_failures"] == 1 and eng.cache.retries == 0
+
+
+def test_retries_exhausted_goes_terminal_failed(duo):
+    clock = FakeClock()
+    faults = ScriptedFaults({"g": [TransientBuildError("1"),
+                                   TransientBuildError("2"),
+                                   TransientBuildError("3")]})
+    eng = _engine(clock=clock, build_fault_hook=faults, build_retries=1,
+                  build_backoff=0.5)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0)
+    _pump_builds(eng)
+    clock.advance(0.5)
+    _pump_builds(eng)  # attempt 2 (the only retry) fails -> terminal
+    assert t.state == TicketState.FAILED
+    assert faults.calls["g"] == 2
+    assert eng.stats["build_failures"] == 1
+
+
+def test_sync_build_path_retries_inline(duo):
+    faults = ScriptedFaults({"g": [TransientBuildError("1"),
+                                   TransientBuildError("2"), None]})
+    eng = _engine(build_workers=0, build_fault_hook=faults, build_retries=2)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0)
+    assert t.result() is not None
+    assert faults.calls["g"] == 3 and eng.cache.retries == 2
+
+
+def test_cache_rejects_bad_retry_config():
+    with pytest.raises(ValueError):
+        GraphCache(build_retries=-1)
+    with pytest.raises(ValueError):
+        GraphCache(retry_backoff=0.0)
+    with pytest.raises(ValueError):
+        GraphCache(retry_backoff=2.0, retry_backoff_cap=1.0)
+
+
+# ------------------------------------------- _idle_wait regression --------
+def test_idle_wait_returns_immediately_when_nothing_pending(duo):
+    eng = _engine(build_workers=0)  # wall clock
+    eng.register_graph("g", duo["kron"])
+    assert eng.submit("g", 0).result() is not None
+    t0 = time.monotonic()
+    eng._idle_wait(timeout=10.0)
+    # the pre-§16 version slept a hard-coded 0.05 s here
+    assert time.monotonic() - t0 < 0.04
+
+
+def test_fake_clock_drain_never_wall_blocks_on_backoff(duo):
+    """A blocking drain under an injected clock owns neither wall time
+    nor the fake clock: the 1000 s backoff must be kicked, not slept."""
+    clock = FakeClock()
+    faults = ScriptedFaults({"g": [TransientBuildError("once"), None]})
+    eng = _engine(clock=clock, build_fault_hook=faults, build_retries=1,
+                  build_backoff=1000.0, build_backoff_cap=1000.0)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0)
+    t0 = time.monotonic()
+    assert t.result() is not None  # result() pumps via _idle_wait
+    assert time.monotonic() - t0 < TIMEOUT_S / 2
+    assert faults.calls["g"] == 2
+
+
+# ------------------------------- EDF promotion / build priority (§16.5) ---
+def test_deferred_promotion_is_edf(duo):
+    clock = FakeClock()
+    eng = _engine(clock=clock, build_workers=0, overload="defer",
+                  max_queue=2)
+    eng.register_graph("g", duo["ring"])
+    filler = [eng.submit("g", i) for i in range(2)]  # queue at capacity
+    loose = eng.submit("g", 2)                 # deferred, no deadline
+    late = eng.submit("g", 3, deadline=100.0)  # deferred, far deadline
+    soon = eng.submit("g", 4, deadline=5.0)    # deferred, near deadline
+    assert len(eng._deferred) == 3
+    eng.step()  # seeds the two queued fillers; queue drains
+    eng._promote_deferred()
+    # EDF: nearest deadline first, deadline-free last; capacity 2 holds one
+    promoted = [q.rid for q in eng._queues["g"]]
+    assert promoted == [int(soon), int(late)]
+    assert [q.rid for q in eng._deferred] == [int(loose)]
+    out = _drain(eng)
+    assert len(out) == 5
+    assert all(t.state == TicketState.DONE
+               for t in filler + [loose, late, soon])
+
+
+def test_expired_deferred_is_shed_not_promoted(duo):
+    clock = FakeClock()
+    eng = _engine(clock=clock, build_workers=0, overload="defer",
+                  max_queue=1)
+    eng.register_graph("g", duo["kron"])
+    first = eng.submit("g", 0)
+    stale = eng.submit("g", 1, deadline=1.0)  # deferred behind first
+    clock.advance(2.0)
+    out = _drain(eng)
+    assert set(out) == {first, stale}
+    assert stale.state == TicketState.EXPIRED
+    assert "deferred promotion" in stale.error
+    assert first.state == TicketState.DONE
+
+
+def test_build_dispatch_prefers_deepest_queue(duo):
+    """§16.5: with one builder busy, parked builds dispatch by queued
+    depth — the build that unblocks the most tickets runs first."""
+    order = []
+    gate = GatedBuild({"warm"})
+
+    def hook(name):
+        order.append(name)
+        gate(name)
+
+    eng = _engine(build_workers=1, build_fault_hook=hook)
+    eng.register_graph("warm", duo["ring"])
+    eng.register_graph("a", duo["kron"])
+    eng.register_graph("b", graphs.make("kron", scale=5, seed=2))
+    warm = eng.submit("warm", 0)  # occupies the only builder (gated)
+    assert gate.entered.wait(TIMEOUT_S)
+    ta = [eng.submit("a", 0)]
+    tb = [eng.submit("b", i) for i in range(3)]
+    assert sorted(eng.cache.building) == ["a", "b", "warm"]
+    gate.release.set()
+    out = _drain(eng)
+    assert order == ["warm", "b", "a"]  # depth 3 beats depth 1
+    assert len(out) == 5
+    assert all(t.state == TicketState.DONE for t in [warm] + ta + tb)
+
+
+# ------------------------------------- graceful degradation (§16.4) -------
+def test_tile_prep_failure_degrades_to_base_layout(duo, monkeypatch):
+    import repro.serve.bfs_engine as engine_mod
+
+    def boom(bd):
+        raise RuntimeError("injected tile-prep fault")
+
+    monkeypatch.setattr(engine_mod.mma_mod, "prep_mma_tiles", boom)
+    eng = BfsEngine(layout="mma", switching="off", use_pallas=False,
+                    build_workers=0)
+    eng.register_graph("g", duo["kron"])
+    t = eng.submit("g", 0)
+    res = t.result()  # served, not failed
+    assert (res.levels == ref_bfs.bfs_levels(duo["kron"], 0)).all()
+    assert eng._runners["g"].layout == eng._base_layout()
+    assert eng.stats["degraded"] == 1
+    h = eng.health()
+    assert list(h.degraded) == ["g:mma"]
+    assert "tile prep" in h.degraded["g:mma"]
+
+
+def test_session_kernel_fault_quarantines_layout(duo, monkeypatch):
+    """A kernel exception mid-tick on the MMA layout quarantines
+    (graph, mma), requeues the in-flight lanes, and a fresh base-layout
+    session completes them — no ticket fails."""
+    orig = _LaneRunner.level
+
+    def flaky_level(self, state, ell):
+        if self.layout == "mma":
+            raise RuntimeError("injected kernel fault")
+        return orig(self, state, ell)
+
+    monkeypatch.setattr(_LaneRunner, "level", flaky_level)
+    g = duo["kron"].symmetrized()
+    eng = BfsEngine(layout="mma", switching="off", use_pallas=False,
+                    build_workers=0)
+    eng.register_graph("g", g)
+    tickets = [eng.submit("g", i) for i in range(4)]
+    out = _drain(eng)
+    assert sorted(out, key=int) == tickets
+    assert all(t.state == TicketState.DONE for t in tickets)
+    for t in tickets:
+        assert (t.result().levels
+                == ref_bfs.bfs_levels(g, t.query.source)).all()
+    assert eng.stats["degraded"] == 1
+    assert eng.stats["build_failures"] == 0
+    assert eng._runners["g"].layout == eng._base_layout()
+    assert list(eng.health().degraded) == ["g:mma"]
+
+
+def test_base_layout_fault_stays_loud(duo, monkeypatch):
+    """§15.3 validation and base-substrate bugs must not be silently
+    'degraded': with no layout left to fall back to, the fault
+    propagates to the caller."""
+
+    def always_boom(self, state, ell):
+        raise RuntimeError("injected base fault")
+
+    monkeypatch.setattr(_LaneRunner, "level", always_boom)
+    eng = _engine(build_workers=0)  # byteplane == base on CPU
+    eng.register_graph("g", duo["kron"])
+    eng.submit("g", 0)
+    with pytest.raises(RuntimeError, match="injected base fault"):
+        _drain(eng)
+    assert eng.stats["degraded"] == 0
+
+
+# ------------------------------------------------ health snapshot (§16.4) -
+def test_health_snapshot_shape(duo):
+    clock = FakeClock()
+    eng = _engine(clock=clock, build_workers=0)
+    eng.register_graph("g", duo["kron"])
+    t1 = eng.submit("g", 0)
+    t2 = eng.submit("g", 1)
+    t2.cancel()
+    h = eng.health()
+    assert h.queue_depths == {"g": 1}
+    assert h.cancelled == 1 and h.expired == 0 and h.deferred == 0
+    assert h.building == [] and h.retry_pending == []
+    d = h.as_dict()
+    assert set(d) == {
+        "queue_depths", "deferred", "in_flight", "live_sessions",
+        "building", "retry_pending", "build_retries", "build_failures",
+        "rejected", "expired", "cancelled", "deadline_misses",
+        "degraded", "tenant_shed", "service_times"}
+    _drain(eng)
+    assert t1.state == TicketState.DONE
+    assert "g/bfs" in eng.health().service_times  # model warmed
+
+
+# --------------------------- oracle exactness under random cancels --------
+@pytest.mark.parametrize("layout,megatick", [
+    ("byteplane", 1), ("packed", 64), ("mma", 64)])
+def test_oracle_exact_under_random_cancellation(layout, megatick):
+    """The tentpole exactness bar: random cancels (waiting and
+    in-flight, across kinds and layouts) never disturb surviving lanes —
+    every non-cancelled ticket is DONE and oracle-exact, every ticket is
+    delivered exactly once, and the lane accounting invariant holds at
+    every step."""
+    trio = matrix_graphs()
+    eng = BfsEngine(layout=layout, switching="off", eta=10.0,
+                    megatick=megatick, kappa=32, use_pallas=False,
+                    build_workers=0)
+    rng = np.random.default_rng([9, megatick, len(layout)])
+    tickets = []
+    for name, g in trio.items():
+        eng.register_graph(name, g)
+        for kind in ("bfs", "distance", "cc"):
+            extra = QUERY_FACTORIES.get(kind, lambda rng, g: {})
+            for _ in range(3):
+                t = eng.submit(name, int(rng.integers(0, g.n)), kind=kind,
+                               **extra(rng, g))
+                tickets.append((t, name, g))
+    to_cancel = [t for (t, _, _) in tickets if rng.random() < 0.4]
+    delivered = []
+    i = 0
+    t0 = time.monotonic()
+    while eng.has_work():
+        delivered.extend(eng.step())
+        running = sum(1 for t in eng._tickets.values()
+                      if t.state == TicketState.RUNNING)
+        assert running == eng.in_flight  # lane accounting invariant
+        while i < len(to_cancel) and rng.random() < 0.5:
+            to_cancel[i].cancel()
+            i += 1
+        assert time.monotonic() - t0 < 4 * TIMEOUT_S
+    for t in to_cancel[i:]:
+        t.cancel()  # post-drain: must refuse (already terminal)
+    assert sorted(delivered, key=int) == sorted(
+        (t for (t, _, _) in tickets), key=int)  # exactly once, all of them
+    cancelled = {int(t) for t in to_cancel
+                 if t.state == TicketState.CANCELLED}
+    for t, name, g in tickets:
+        if int(t) in cancelled:
+            with pytest.raises(TicketCancelled):
+                t.result()
+            continue
+        assert t.state == TicketState.DONE
+        lv = ref_bfs.bfs_levels(g, t.query.source)
+        workloads.verify_result(t.result(), t.query, lv,
+                                unreached=UNREACHED, graph=g)
+    assert eng.stats["cancelled"] == len(cancelled)
+    assert eng.in_flight == 0 and not eng._tickets

@@ -1,11 +1,22 @@
-"""Randomized service soak (DESIGN.md §14): interleave submits, steps,
-evictions, and overload sheds across two graphs under a randomly drawn
-engine configuration, checking oracle exactness and the no-lost /
-no-duplicated-ticket and cache byte-accounting invariants at every step.
+"""Randomized service soak (DESIGN.md §14 + §16): interleave submits
+(with random deadlines), steps, evictions, random ``cancel()`` calls,
+overload sheds, and flaky builds across two graphs under a randomly
+drawn engine configuration, checking oracle exactness and the no-lost /
+no-duplicated-ticket, lane-accounting, and cache byte-accounting
+invariants at every step.
 
-Step count is bounded by the ``REPRO_SOAK_STEPS`` env knob (default 60 —
-a few seconds per seed); CI can crank it for a long soak.  Runs under
-the ``soak`` marker: ``pytest -m soak`` selects just these.
+Env knobs (all optional — CI's soak variant cranks them):
+
+* ``REPRO_SOAK_STEPS`` — op count per seed (default 60).
+* ``REPRO_SOAK_CANCEL_RATE`` — per-op probability of cancelling a
+  random live ticket (default 0.10).
+* ``REPRO_SOAK_DEADLINE_RATE`` — per-submit probability of attaching a
+  random deadline (default 0.20).
+* ``REPRO_SOAK_FLAKY`` — force the build-fault mode: ``retry``
+  (flaky-then-succeed with §16.3 retries; no ticket may FAIL), ``fail``
+  (no retry budget; FAILED surfaces), or unset (drawn per seed).
+
+Runs under the ``soak`` marker: ``pytest -m soak`` selects just these.
 """
 import os
 
@@ -20,6 +31,12 @@ from repro.serve.bfs_engine import BfsEngine, TicketState
 from hypothesis_shim import given_seeds
 
 STEPS = int(os.environ.get("REPRO_SOAK_STEPS", "60"))
+CANCEL_RATE = float(os.environ.get("REPRO_SOAK_CANCEL_RATE", "0.10"))
+DEADLINE_RATE = float(os.environ.get("REPRO_SOAK_DEADLINE_RATE", "0.20"))
+FLAKY_MODE = os.environ.get("REPRO_SOAK_FLAKY", "")
+# wall-clock deadline menu: the short end expires at seeding or a window
+# boundary, the long end always completes
+DEADLINES = (0.002, 0.05, 30.0)
 
 GRAPHS = {
     "kron": graphs.make("kron", scale=5, seed=3),
@@ -56,6 +73,11 @@ def _check_ticket_invariants(eng, tickets):
     live = {int(t) for t in tickets if not t.done()}
     assert set(eng._tickets) == live, \
         "engine ticket registry out of sync with live tickets"
+    # §16.2 lane accounting: every seeded lane is a RUNNING ticket
+    # (cancel-requested lanes stay RUNNING until the window boundary)
+    running = sum(1 for t in eng._tickets.values()
+                  if t.state == TicketState.RUNNING)
+    assert running == eng.in_flight, "lane accounting drifted"
 
 
 @pytest.mark.soak
@@ -64,7 +86,8 @@ def _check_ticket_invariants(eng, tickets):
 def test_service_soak(seed, layout):
     rng = np.random.default_rng(seed * 2 + (layout == "mma"))
 
-    flaky = bool(rng.integers(0, 2))
+    flaky_mode = (FLAKY_MODE
+                  or ["", "fail", "retry"][int(rng.integers(0, 3))])
     overload = ["reject", "defer", None][int(rng.integers(0, 3))]
     kw = dict(
         kappa=32, layout=layout, use_pallas=False,
@@ -80,8 +103,13 @@ def test_service_soak(seed, layout):
         # a tight budget so evictions happen organically, never below
         # one resident entry (the cache always keeps the newest)
         kw["cache_bytes"] = 1
-    if flaky:
+    if flaky_mode:
         kw["build_fault_hook"] = FlakyFirstBuild()
+        if flaky_mode == "retry":
+            # flaky-then-succeed with §16.3 retry budget: the transient
+            # first failure must be absorbed, never a FAILED ticket
+            kw.update(build_retries=2, build_backoff=0.01,
+                      build_backoff_cap=0.05)
     eng = BfsEngine(**kw)
     for name, g in GRAPHS.items():
         eng.register_graph(name, g)
@@ -91,6 +119,10 @@ def test_service_soak(seed, layout):
     # (cc/mis/tpv) exercise graph-state rebuilds across random evictions
     kinds = sorted(eng.workload_kinds)
     tickets, delivered = [], []
+    # tickets terminal the moment submit() returned (REJECTED by depth,
+    # or EXPIRED by the §16.1 admission predictor): like REJECTED
+    # always, they are never delivered through step()
+    shed_at_submit = set()
     for _ in range(STEPS):
         op = rng.random()
         if op < 0.45:  # submit a burst
@@ -101,10 +133,22 @@ def test_service_soak(seed, layout):
                 tenant = ["default", "gold"][int(rng.integers(0, 2))]
                 extra = ({"target": int(rng.integers(0, GRAPHS[name].n))}
                          if kind == "distance" else {})
-                tickets.append(
-                    eng.submit(name, src, kind=kind, tenant=tenant,
-                               **extra))
-        elif op < 0.55:  # evict a random graph mid-service
+                if rng.random() < DEADLINE_RATE:
+                    extra["deadline"] = float(
+                        DEADLINES[int(rng.integers(0, len(DEADLINES)))])
+                t = eng.submit(name, src, kind=kind, tenant=tenant,
+                               **extra)
+                tickets.append(t)
+                # NB: a sync-path (build_workers=0) build failure makes
+                # the ticket FAILED already here, but it *is* delivered
+                # through step(); only these two sheds are not
+                if t.state in (TicketState.REJECTED, TicketState.EXPIRED):
+                    shed_at_submit.add(int(t))
+        elif op < 0.45 + CANCEL_RATE:  # cancel a random live ticket
+            live = [t for t in tickets[-40:] if not t.done()]
+            if live:
+                live[int(rng.integers(0, len(live)))].cancel()
+        elif op < 0.60 + CANCEL_RATE:  # evict a random graph mid-service
             eng.cache.evict(names[int(rng.integers(0, len(names)))])
         else:
             delivered.extend(eng.step())
@@ -127,16 +171,25 @@ def test_service_soak(seed, layout):
     for t in tickets:
         assert t.done(), f"ticket {int(t)} not terminal after drain"
         states[t.state] = states.get(t.state, 0) + 1
-    # exactly-once delivery: every non-rejected ticket delivered once,
-    # REJECTED tickets (shed at submit) never delivered at all
+    # exactly-once delivery: every ticket that *entered* the engine is
+    # delivered exactly once; submit-time sheds (REJECTED, or EXPIRED by
+    # the §16.1 admission predictor) never at all
     ids = [int(t) for t in delivered]
     assert len(ids) == len(set(ids)), "duplicate ticket delivery"
-    expect = {int(t) for t in tickets
-              if t.state != TicketState.REJECTED}
+    expect = {int(t) for t in tickets} - shed_at_submit
     assert set(ids) == expect, "lost or phantom ticket deliveries"
-    if flaky:
+    if flaky_mode == "fail":
         assert any(t.state == TicketState.FAILED for t in tickets) or \
             not tickets, "flaky hook never surfaced a FAILED ticket"
+    elif flaky_mode == "retry":
+        # the transient first failure is absorbed by the retry budget:
+        # no build may go terminal, no ticket may FAIL
+        assert eng.stats["build_failures"] == 0
+        assert states.get(TicketState.FAILED, 0) == 0
+        if tickets:
+            assert eng.cache.retries >= 1
+    assert eng.stats["cancelled"] == states.get(TicketState.CANCELLED, 0)
+    assert eng.stats["expired"] == states.get(TicketState.EXPIRED, 0)
 
     for t in tickets:
         if t.state != TicketState.DONE:
