@@ -187,6 +187,18 @@ class RowShardedBvss:
     v2r: jax.Array        # (P, nv_max) int32 — GLOBAL slice-set ids
     n_shards: int
 
+    @property
+    def shard_bytes(self) -> int:
+        """Substrate bytes **one** shard holds resident (its slice of
+        masks/row_ids/v2r) — what mesh serving charges that shard's
+        device in the per-device cache accounting (DESIGN.md §17.3).
+        Shards are padded to the largest one (``nv_max``), so this is
+        exact for every shard, not an average."""
+        per = self.nv_max * self.tau        # masks uint8
+        per += self.nv_max * self.tau * 4   # row_ids int32
+        per += self.nv_max * 4              # v2r int32
+        return int(per)
+
 
 def build_row_sharded(b: Bvss, n_shards: int) -> RowShardedBvss:
     """Host-side re-bucketing of BVSS slices by row range."""

@@ -10,6 +10,11 @@
 
 Registers one graph per family, submits a randomly interleaved stream of
 requests, drains the engine, and reports throughput, per-request latency
+(``--mesh``/``--devices N`` serve through the DESIGN.md §17 device mesh:
+source-parallel replication by default, row-sharded graph-parallel
+artifacts for graphs over ``--device-budget-mb``; ``--health-json PATH``
+writes ``engine.health()`` as JSON every ``--health-interval`` seconds
+for scrape-based monitoring)
 (p50/p99 from the tickets' submit/complete timestamps, DESIGN.md §12.1),
 per-graph queue wait (``eng.stats``), and admission/cache/switching
 statistics.  ``--verify`` checks every result against the CPU oracle —
@@ -63,9 +68,45 @@ lifecycle summary alongside the §14 shed statistics.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import numpy as np
+
+
+def _write_health(eng, path: str) -> None:
+    """One ``engine.health()`` snapshot as JSON, written atomically
+    (tmp + rename) so a concurrent scraper never reads a torn file."""
+    snap = eng.health().as_dict()
+    snap["ts"] = time.time()
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as fh:
+        json.dump(snap, fh, indent=2, sort_keys=True, default=str)
+        fh.write("\n")
+    os.replace(tmp, path)
+
+
+def _drain_with_health(eng, path: str, interval: float) -> dict:
+    """``eng.run()`` with a ``--health-json`` scrape file refreshed every
+    ``interval`` seconds of wall time while the drain makes progress,
+    plus a final snapshot of the drained engine."""
+    out = {}
+    _write_health(eng, path)
+    last = time.perf_counter()
+    while eng.has_work() or eng.cache.building:
+        stepped = eng.step()
+        for t in stepped:
+            if t._result is not None:
+                out[int(t)] = t._result
+        if not stepped:
+            eng._idle_wait()
+        now = time.perf_counter()
+        if now - last >= interval:
+            _write_health(eng, path)
+            last = now
+    _write_health(eng, path)
+    return out
 
 
 def main():
@@ -135,6 +176,27 @@ def main():
                     help="fraction of submitted requests cancelled "
                          "mid-stream (§16.2 client-abandonment demo); "
                          "default 0")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve through a device mesh (DESIGN.md §17): "
+                         "source-parallel replication across the group, "
+                         "row-sharded graph-parallel artifacts for graphs "
+                         "over --device-budget-mb")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="devices in the mesh (default: all visible); "
+                         "use XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 for virtual CPU devices")
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="per-device artifact byte budget in MiB (§17.2): "
+                         "graphs projected over it build row-sharded "
+                         "artifacts spanning the mesh group (rejected "
+                         "without --mesh)")
+    ap.add_argument("--health-json", default=None, metavar="PATH",
+                    help="write engine.health() as JSON to PATH every "
+                         "--health-interval seconds while draining "
+                         "(§16.4/§17.3 scrape endpoint)")
+    ap.add_argument("--health-interval", type=float, default=1.0,
+                    help="seconds between --health-json snapshots "
+                         "(default 1.0)")
     ap.add_argument("--verify", action="store_true",
                     help="check every result against the CPU oracle")
     args = ap.parse_args()
@@ -169,6 +231,26 @@ def main():
         ap.error(f"--build-retries must be >= 0, got {args.build_retries}")
     if not 0.0 <= args.cancel_rate <= 1.0:
         ap.error(f"--cancel-rate must be in [0, 1], got {args.cancel_rate}")
+    if args.health_interval <= 0:
+        ap.error(f"--health-interval must be > 0, got {args.health_interval}")
+    mesh = None
+    if args.mesh:
+        import jax
+
+        from repro.serve.mesh import EngineMesh
+
+        devs = jax.devices()
+        if args.devices is not None:
+            if not 1 <= args.devices <= len(devs):
+                ap.error(f"--devices must be in [1, {len(devs)}], "
+                         f"got {args.devices}")
+            devs = devs[:args.devices]
+        mesh = EngineMesh(devs)
+        print(f"mesh: {mesh}")
+    elif args.devices is not None:
+        ap.error("--devices requires --mesh")
+    device_budget = (int(args.device_budget_mb * (1 << 20))
+                     if args.device_budget_mb is not None else None)
     eng = BfsEngine(kappa=args.kappa, cache_bytes=cache_bytes,
                     layout=args.layout, scheduler=args.scheduler,
                     switching=args.switching,
@@ -177,7 +259,8 @@ def main():
                     max_queue=args.max_queue,
                     max_queue_total=args.max_queue_total,
                     overload=args.overload,
-                    build_retries=args.build_retries)
+                    build_retries=args.build_retries,
+                    mesh=mesh, device_budget=device_budget)
 
     kinds = [k.strip() for k in args.kinds.split(",") if k.strip()]
     bad = [k for k in kinds if k not in eng.workload_kinds]
@@ -221,7 +304,11 @@ def main():
                 live = [t for t in tickets if not t.done()]
                 if live:
                     live[int(rng.integers(0, len(live)))].cancel()
-    results.update(eng.run())
+    if args.health_json:
+        results.update(_drain_with_health(eng, args.health_json,
+                                          args.health_interval))
+    else:
+        results.update(eng.run())
     dt = time.perf_counter() - t0
 
     by_kind = {k: sum(1 for t in tickets if t.query.kind == k)
@@ -286,6 +373,11 @@ def main():
           f"retry_pending={h.retry_pending} "
           f"deadline_misses={h.deadline_misses} "
           f"degraded={dict(h.degraded) or '{}'}")
+    if args.mesh or args.device_budget_mb is not None:
+        occ = " ".join(f"dev{d}={b / (1 << 20):.2f}MiB"
+                       for d, b in sorted(h.device_bytes.items()))
+        print(f"  mesh occupancy: {occ or 'empty'} "
+              f"queue_depth={dict(sorted(h.device_queue_depth.items()))}")
     if args.deadline_ms is not None and h.service_times:
         ewma = " ".join(f"{k}={v * 1e3:.2f}ms"
                         for k, v in sorted(h.service_times.items()))

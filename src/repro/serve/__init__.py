@@ -23,5 +23,10 @@ immediately and reclaims running lanes at the next window boundary
 backoff, a faulting non-base layout quarantines per ``(graph, layout)``
 and falls back to the base substrate instead of failing tickets, and
 ``engine.health()`` snapshots the whole lifecycle for operators.
-``serve_loop`` is the LM decode continuous-batching engine the graph
-engine's slot-refill design mirrors."""
+``mesh`` scales the same surface across devices (§17):
+``BfsEngine(mesh=EngineMesh(...))`` replicates small graphs for
+``kappa x n_devices`` lanes in flight and row-shards graphs whose
+projected artifact exceeds ``device_budget`` into one ``shard_map``
+dispatch per level, with per-device cache accounting, eviction, and
+health ledgers.  ``serve_loop`` is the LM decode continuous-batching
+engine the graph engine's slot-refill design mirrors."""

@@ -188,6 +188,7 @@ from repro.kernels.pull_scatter_ms_packed import (
     pull_scatter_ms_packed, pull_scatter_ms_packed_ref)
 from repro.kernels.scatter_or import scatter_or, scatter_or_ref
 from repro.serve import lifecycle as lifecycle_mod
+from repro.serve import mesh as mesh_mod
 from repro.serve import workloads as workloads_mod
 from repro.serve.workloads import (  # re-exported: the request/result
     KIND_BFS, KIND_CLOSENESS, KIND_DISTANCE, KIND_REACH,  # noqa: F401
@@ -420,10 +421,20 @@ class GraphArtifacts:
     # build — the cause lands here and the engine quarantines the
     # (graph, 'mma') pair, serving the base layout instead
     degraded: str | None = None
+    # §17 mesh serving: per-device replicas of ``bd`` (source-parallel),
+    # or a row-sharded substrate spanning the group (graph-parallel);
+    # ``placement`` pins the sessions to the group's device ids and
+    # ``per_device_bytes`` is what each of those devices holds resident
+    replicas: list | None = None
+    sharded: "mesh_mod.ShardedGraph | None" = None
+    placement: tuple = ()
+    per_device_bytes: dict | None = None
 
     @property
     def total_bytes(self) -> int:
         """What this entry costs the cache budget (DESIGN.md §10.3)."""
+        if self.per_device_bytes:
+            return sum(self.per_device_bytes.values()) + self.aux_bytes
         return self.device_bytes + self.aux_bytes
 
 
@@ -438,7 +449,8 @@ def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
                     eta: float = switching_mod.ETA_DEFAULT,
                     probe_use_pallas: bool = False,
                     probe_runner=None,
-                    mma_tiles: bool = False) -> GraphArtifacts:
+                    mma_tiles: bool = False,
+                    prebuilt: tuple | None = None) -> GraphArtifacts:
     """Preprocess ``g`` for serving: reorder -> BVSS -> device arrays, plus
     (``probe=True``) the paper's switching probe, whose verdict is cached
     in the artifact.  ``probe_runner`` (a ``bd -> runner`` factory, supplied
@@ -453,9 +465,15 @@ def build_artifacts(name: str, g: Graph, *, reorder: str | None = None,
     verdict (§13.4) — factories taking one argument are only ever called
     when no tiles were requested."""
     config = config or BvssConfig()
-    rr = reorder_mod.reorder(g, sigma=config.sigma, force=reorder)
-    gp = g.permuted(rr.perm)
-    b = build_bvss(gp, config)
+    if prebuilt is not None:
+        # §17: the mesh build path already ran reorder + BVSS on host (it
+        # needed the byte projection before deciding how to place) — do
+        # not redo the expensive preprocessing
+        rr, b = prebuilt
+    else:
+        rr = reorder_mod.reorder(g, sigma=config.sigma, force=reorder)
+        gp = g.permuted(rr.perm)
+        b = build_bvss(gp, config)
     bd = blest.to_device(b)
     tiles, degraded = None, None
     if mma_tiles:
@@ -584,6 +602,14 @@ class GraphCache:
         self._retry: dict[str, tuple[int, float]] = {}
         self._attempts: dict[str, int] = {}
         self._executor: ThreadPoolExecutor | None = None
+        # §17.3 mesh hooks, set by the engine after construction: a
+        # replacement build callable ``fn(name, graph, reorder) -> art``
+        # (mesh-aware placement + sharding decisions live there), a
+        # per-device byte bound, and the device every non-placed entry
+        # is charged to.
+        self.build_fn = None
+        self.device_budget: int | None = None
+        self.default_device_id = int(jax.devices()[0].id)
 
     def register(self, name: str, graph: Graph, *,
                  reorder: str | None = None) -> None:
@@ -609,6 +635,31 @@ class GraphCache:
         # total_bytes, not device_bytes: the perm / probe artifacts an entry
         # pins must count or the configured bound silently over-admits
         return sum(e.total_bytes for e in self._entries.values())
+
+    def _devices_of(self, art: GraphArtifacts) -> dict[int, int]:
+        """Device-id -> resident bytes for one entry (§17.3).  Placed
+        entries carry their own ``per_device_bytes`` map (replicas or
+        shards); everything else is charged whole to the default
+        device.  ``aux_bytes`` (perm, probe state) lives on host but is
+        charged to the entry's first device so the configured bound
+        still covers it."""
+        pdb = getattr(art, "per_device_bytes", None)
+        if pdb:
+            out = dict(pdb)
+            first = next(iter(out))
+            out[first] += art.aux_bytes
+            return out
+        return {self.default_device_id: art.total_bytes}
+
+    def per_device(self) -> dict[int, int]:
+        """Resident bytes per device id across all entries (§17.3) —
+        the accounting surface behind per-device eviction and
+        ``engine.health().device_bytes``."""
+        out: dict[int, int] = {}
+        for art in self._entries.values():
+            for dev, nb in self._devices_of(art).items():
+                out[dev] = out.get(dev, 0) + nb
+        return out
 
     def peek(self, name: str) -> GraphArtifacts | None:
         """Resident entry without touching LRU order or hit stats (for
@@ -667,6 +718,10 @@ class GraphCache:
         if self.fault_hook is not None:
             self.fault_hook(name)
         g, reorder = self._specs[name]
+        if self.build_fn is not None:
+            # §17.3: the engine routes builds through the mesh subsystem
+            # (replication / row-sharding decided per graph at build time)
+            return self.build_fn(name, g, reorder)
         return build_artifacts(name, g, reorder=reorder, config=self.config,
                                probe=self.probe, eta=self.eta,
                                probe_use_pallas=self.probe_use_pallas,
@@ -844,10 +899,29 @@ class GraphCache:
         """Evict LRU entries until the budget holds.  The entry `get` is
         about to return was just move_to_end'd and the `len > 1` bound keeps
         at least one entry, so it is never the victim."""
-        if self.max_bytes is None:
+        if self.max_bytes is not None:
+            while (self.current_bytes > self.max_bytes
+                   and len(self._entries) > 1):
+                victim, _ = next(iter(self._entries.items()))
+                self._evict_entry(victim)
+        if self.device_budget is None:
             return
-        while self.current_bytes > self.max_bytes and len(self._entries) > 1:
-            victim, _ = next(iter(self._entries.items()))
+        # §17.3 per-device bound: evict the LRU entry touching any
+        # over-budget device.  The MRU entry (the one being installed /
+        # returned) is never the victim, so an entry that alone exceeds
+        # the bound still serves — oversized *admission* is the mesh
+        # build path's job, not eviction's.
+        while len(self._entries) > 1:
+            over = {d for d, nb in self.per_device().items()
+                    if nb > self.device_budget}
+            if not over:
+                return
+            names = list(self._entries)
+            victim = next(
+                (n for n in names[:-1]
+                 if over & set(self._devices_of(self._entries[n]))), None)
+            if victim is None:
+                return
             self._evict_entry(victim)
 
     def _evict_entry(self, victim: str) -> None:
@@ -1484,12 +1558,14 @@ class _GraphSession:
     """
 
     def __init__(self, engine: "BfsEngine", name: str,
-                 queue: "_TenantQueue", art: GraphArtifacts):
+                 queue: "_TenantQueue", art: GraphArtifacts, runner=None):
         self.engine = engine
         self.name = name
         self.queue = queue
         self.art = art
-        self.runner = engine._runner_for(art)
+        # §17.1: a mesh session group hands each replica its own runner;
+        # single-device sessions resolve through the engine as before
+        self.runner = runner if runner is not None else engine._runner_for(art)
         kappa = engine.kappa
         self.lanes: list[BfsQuery | None] = [None] * kappa
         self.wl: list[Workload | None] = [None] * kappa
@@ -1509,7 +1585,10 @@ class _GraphSession:
         self.watch_ids = np.full(kappa, -1, np.int64)
         self.watch_dev = None
         self.tl = np.full(kappa, UNREACHED, np.int64)
-        self.policy_on = engine._policy_active(art)
+        # sharded runners run policy-off (§17.2): Eq. 6's queued sweep has
+        # no row-sharded formulation, so the dense path is always taken
+        self.policy_on = (engine._policy_active(art)
+                          and getattr(self.runner, "supports_policy", True))
         # session-held workload graph state (§15.2): populated from the
         # engine memo at first use, kept here so eviction mid-service
         # never forces a rebuild (the same pinning rule as art/runner)
@@ -1912,9 +1991,14 @@ class BfsEngine:
                  clock=None,
                  build_retries: int = 0,
                  build_backoff: float = 0.05,
-                 build_backoff_cap: float = 2.0):
+                 build_backoff_cap: float = 2.0,
+                 mesh: "mesh_mod.EngineMesh | None" = None,
+                 device_budget: int | None = None):
         if kappa % 32 != 0 or kappa <= 0:
             raise ValueError("kappa must be a positive multiple of 32")
+        if device_budget is not None and device_budget < 1:
+            raise ValueError(
+                f"device_budget must be >= 1 byte, got {device_budget}")
         if layout not in LAYOUTS:
             raise ValueError(
                 f"layout must be one of {LAYOUTS}, got {layout!r}")
@@ -2002,6 +2086,15 @@ class BfsEngine:
                                 retry_backoff_cap=build_backoff_cap,
                                 clock=self._clock)
         self.cache.on_evict(self._drop_runner)
+        # §17 mesh serving: device groups for source-parallel replication
+        # and the per-device byte bound that triggers row-sharded builds
+        # (§17.2) and per-device eviction (§17.3)
+        self.mesh = mesh
+        self.device_budget = device_budget
+        self._mesh_runners: dict[str, list] = {}
+        self.cache.device_budget = device_budget
+        if mesh is not None or device_budget is not None:
+            self.cache.build_fn = self._mesh_build
         # §16.5: dispatch parked builds by queued depth, not FIFO — the
         # build that unblocks the most waiting tickets runs first
         self.cache.build_priority = (
@@ -2128,6 +2221,11 @@ class BfsEngine:
         self.stats["queries"] += 1
         if ticket.deadline_at is not None:
             depth = len(self._queues.get(graph) or ())
+            # §16.1: deferred arrivals wait in line too — they promote
+            # into this graph's queue ahead of the new request, so
+            # leaving them out of the queueing term under-predicts wait
+            # exactly when overload='defer' is shedding-relevant
+            depth += sum(1 for d in self._deferred if d.graph == graph)
             pred = self._slo.predict_latency(graph, kind, depth, self.kappa)
             if (pred is not None
                     and ticket.submitted_at + pred > ticket.deadline_at):
@@ -2517,7 +2615,7 @@ class BfsEngine:
             art = self.cache.get(name)
         self._note_degraded(art)
         try:
-            sess = _GraphSession(self, name, self._queues[name], art)
+            sess = self._new_session(name, art)
         except Exception as exc:  # noqa: BLE001 — §16.4 degradation
             lay = self._resolve_layout(art)
             if lay == self._base_layout():
@@ -2525,13 +2623,24 @@ class BfsEngine:
             self._quarantine_pair(name, lay,
                                   f"session open raised: {exc!r}")
             self._drop_runner(name)
-            sess = _GraphSession(self, name, self._queues[name], art)
+            sess = self._new_session(name, art)
         self._sessions[name] = sess
         self._rotation.append(name)
         if len(self._rotation) == 1:
             self._quantum_left = self._weight(name)
         self.stats["max_live_sessions"] = max(
             self.stats["max_live_sessions"], len(self._sessions))
+
+    def _new_session(self, name: str, art: GraphArtifacts):
+        """One serving session for ``art``: a §17.1 mesh group (one
+        replica sub-session per device, kappa lanes each) when the
+        artifact was replicated across a device group, else the plain
+        single-runner session.  Sharded artifacts (§17.2) run as one
+        session whose runner dispatches over the whole group."""
+        if getattr(art, "replicas", None):
+            return mesh_mod._MeshSessionGroup(self, name,
+                                              self._queues[name], art)
+        return _GraphSession(self, name, self._queues[name], art)
 
     def _close_session(self, name: str) -> None:
         sess = self._sessions.pop(name)
@@ -2687,6 +2796,8 @@ class BfsEngine:
                          for k, v in sorted(self.stats.items())
                          if k.startswith("shed_tenant:")},
             service_times=self._slo.snapshot(),
+            device_bytes=self.cache.per_device(),
+            device_queue_depth=self._device_queue_depth(),
         )
 
     # ---- per-graph runners / probe adoption --------------------------------
@@ -2756,6 +2867,14 @@ class BfsEngine:
     def _runner_for(self, art: GraphArtifacts) -> _LaneRunner:
         name, bd = art.name, art.bd
         r = self._runners.get(name)
+        if getattr(art, "sharded", None) is not None:
+            # §17.2 graph-parallel: one runner spanning the whole group
+            if not isinstance(r, mesh_mod.ShardedLaneRunner) or r.bd is not bd:
+                r = mesh_mod.ShardedLaneRunner(
+                    art.sharded, bd, self.kappa,
+                    layout=self._resolve_layout(art))
+                self._runners[name] = r
+            return r
         if r is None or r.bd is not bd:
             layout = self._resolve_layout(art)
             r = (self._adopt_probe_runner(bd, layout)
@@ -2765,9 +2884,80 @@ class BfsEngine:
             self._runners[name] = r
         return r
 
+    def _mesh_runners_for(self, art: GraphArtifacts) -> list[_LaneRunner]:
+        """Per-replica runners for a §17.1 source-parallel artifact, one
+        per device in its placement group, cached per graph (the jit
+        caches inside a runner are per-shape and expensive to rebuild)."""
+        name = art.name
+        group = self._mesh_runners.get(name)
+        if group is None or group[0].bd is not art.replicas[0]:
+            layout = self._resolve_layout(art)
+            group = [_LaneRunner(bd_k, self.kappa, layout=layout,
+                                 use_pallas=self.use_pallas,
+                                 mma_tiles=art.mma)
+                     for bd_k in art.replicas]
+            self._mesh_runners[name] = group
+            # keep the single-runner registry pointing at replica 0 so
+            # layout introspection (tests, launchers) sees the mesh graph
+            self._runners[name] = group[0]
+        return group
+
     def _drop_runner(self, name: str) -> None:
         self._runners.pop(name, None)
+        self._mesh_runners.pop(name, None)
         self._wl_state.pop(name, None)
+
+    # ---- mesh placement (§17) ----------------------------------------------
+    def _mesh_build(self, name: str, g: Graph,
+                    reorder: str | None) -> GraphArtifacts:
+        """The cache's ``build_fn`` when mesh serving or a per-device
+        byte budget is configured: route the build through
+        :func:`repro.serve.mesh.build_mesh_artifacts`, placing the graph
+        on the least-loaded device group (§17.3)."""
+        group = self._pick_group() if self.mesh is not None else None
+        return mesh_mod.build_mesh_artifacts(
+            name, g, group=group, reorder=reorder,
+            config=self.cache.config, probe=self.cache.probe,
+            eta=self.cache.eta,
+            probe_use_pallas=self.cache.probe_use_pallas,
+            probe_runner=self.cache.probe_runner,
+            device_budget=self.device_budget,
+            fault_hook=self.cache.fault_hook)
+
+    def _pick_group(self):
+        """Least-loaded placement (§17.3): the device group carrying the
+        fewest resident cache bytes takes the next build.  Reads only
+        the cache's entry map, so the §14.3 worker thread may call it."""
+        groups = self.mesh.groups
+        if len(groups) == 1:
+            return groups[0]
+        per = self.cache.per_device()
+        return min(groups, key=lambda grp: sum(per.get(int(d.id), 0)
+                                               for d in grp))
+
+    def _placement_of(self, name: str) -> tuple:
+        """Device ids serving ``name`` right now: the pinned session
+        artifact if live, else the resident/held entry; empty when the
+        graph has no placed artifact (single-device default)."""
+        sess = self._sessions.get(name)
+        if sess is not None:
+            return getattr(sess.art, "placement", ())
+        art = self.cache.peek(name) or self._built.get(name)
+        return getattr(art, "placement", ()) if art is not None else ()
+
+    def _device_queue_depth(self) -> dict[int, int]:
+        """Queued requests per device id (§17.3): each graph's queue
+        depth lands on every device in its placement (lanes will open
+        there), or the default device when unplaced."""
+        out: dict[int, int] = {}
+        default = self.cache.default_device_id
+        for name, qq in self._queues.items():
+            depth = len(qq)
+            if not depth:
+                continue
+            for dev in (self._placement_of(name) or (default,)):
+                out[dev] = out.get(dev, 0) + depth
+        return out
 
     def _workload_graph_state(self, name: str, wl: Workload, graph) -> object:
         """Memoized ``Workload.graph_state`` for ``graph`` (§15.2): shared

@@ -188,6 +188,11 @@ class EngineHealth:
     degraded: dict[str, str]            # "graph:layout" -> quarantine cause
     tenant_shed: dict[str, int]         # per-tenant rejected+expired count
     service_times: dict[str, float]     # EWMA snapshot, "graph/kind" -> s
+    # §17.3 mesh occupancy: resident artifact bytes and queued requests
+    # per device id (single-device engines charge the default device)
+    device_bytes: dict[int, int] = dataclasses.field(default_factory=dict)
+    device_queue_depth: dict[int, int] = dataclasses.field(
+        default_factory=dict)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -151,6 +151,36 @@ def test_predicted_violation_sheds_at_admission(duo):
     assert t2.result() is not None
 
 
+def test_admission_prediction_counts_deferred_backlog(duo):
+    """The §16.1 queueing term must see deferred arrivals: they promote
+    into the graph's queue ahead of a new request, so counting only the
+    seeded queue under-predicts wait exactly when overload='defer' has
+    parked the backlog."""
+    clock = FakeClock()
+    eng = _engine(clock=clock, build_workers=0, max_queue=1,
+                  overload="defer")
+    eng.register_graph("g", duo["kron"])
+    # warm the model: one request whose lane visibly takes 2.0s
+    warm = eng.submit("g", 0)
+    eng.step()
+    clock.advance(2.0)
+    _pump_until(eng, warm.done)
+    assert eng._slo.service("g", "bfs") == pytest.approx(2.0)
+    # 1 queued + 31 deferred ahead of the probe
+    fillers = [eng.submit("g", i % duo["kron"].n) for i in range(32)]
+    assert eng.health().deferred == 31
+    # with the backlog counted: 2.0 * (1 + 32/32) = 4.0 > 3.0 -> shed;
+    # the seeded queue alone (2.0 * (1 + 1/32) ~ 2.06) would admit
+    t = eng.submit("g", 1, deadline=3.0)
+    assert t.state == TicketState.EXPIRED and t.done()
+    assert "predicted latency" in t.error and "admission" in t.error
+    # a budget above the backlog-aware prediction still admits
+    ok = eng.submit("g", 2, deadline=50.0)
+    _drain(eng)
+    assert ok.state == TicketState.DONE
+    assert all(f.state == TicketState.DONE for f in fillers)
+
+
 def test_deadline_expired_before_seeding_is_shed(duo):
     clock = FakeClock()
     eng = _engine(clock=clock, build_workers=0)
@@ -500,7 +530,10 @@ def test_health_snapshot_shape(duo):
         "queue_depths", "deferred", "in_flight", "live_sessions",
         "building", "retry_pending", "build_retries", "build_failures",
         "rejected", "expired", "cancelled", "deadline_misses",
-        "degraded", "tenant_shed", "service_times"}
+        "degraded", "tenant_shed", "service_times",
+        "device_bytes", "device_queue_depth"}
+    # §17.3: a single-device engine charges the default device
+    assert list(h.device_queue_depth.values()) == [1]
     _drain(eng)
     assert t1.state == TicketState.DONE
     assert "g/bfs" in eng.health().service_times  # model warmed

@@ -80,10 +80,7 @@ def _check_ticket_invariants(eng, tickets):
     assert running == eng.in_flight, "lane accounting drifted"
 
 
-@pytest.mark.soak
-@pytest.mark.parametrize("layout", ["byteplane", "mma"])
-@given_seeds(8)
-def test_service_soak(seed, layout):
+def _soak(seed, layout, engine_extra=None):
     rng = np.random.default_rng(seed * 2 + (layout == "mma"))
 
     flaky_mode = (FLAKY_MODE
@@ -107,9 +104,15 @@ def test_service_soak(seed, layout):
         kw["build_fault_hook"] = FlakyFirstBuild()
         if flaky_mode == "retry":
             # flaky-then-succeed with §16.3 retry budget: the transient
-            # first failure must be absorbed, never a FAILED ticket
-            kw.update(build_retries=2, build_backoff=0.01,
+            # first failure must be absorbed, never a FAILED ticket.
+            # The mesh build path re-runs the per-replica fault points
+            # (name#replicaK, §17.1) on every attempt, so a flaky-once
+            # hook needs one retry per replica to burn through them all.
+            retries = (2 if not (engine_extra or {}).get("mesh")
+                       else 2 + len((engine_extra or {})["mesh"].devices))
+            kw.update(build_retries=retries, build_backoff=0.01,
                       build_backoff_cap=0.05)
+    kw.update(engine_extra or {})
     eng = BfsEngine(**kw)
     for name, g in GRAPHS.items():
         eng.register_graph(name, g)
@@ -199,3 +202,29 @@ def test_service_soak(seed, layout):
                                 ORACLE[(q.graph, q.source)],
                                 unreached=ref_bfs.UNREACHED,
                                 graph=GRAPHS[q.graph])
+
+
+@pytest.mark.soak
+@pytest.mark.parametrize("layout", ["byteplane", "mma"])
+@given_seeds(8)
+def test_service_soak(seed, layout):
+    _soak(seed, layout)
+
+
+@pytest.mark.soak
+@pytest.mark.parametrize("layout", ["byteplane", "packed"])
+@given_seeds(4)
+def test_service_soak_mesh(seed, layout):
+    """The same randomized soak through a §17 source-parallel mesh:
+    kappa lanes per device, per-replica fault points in the build path,
+    evictions dropping the whole runner group.  Needs the virtual CPU
+    devices CI's mesh job forces
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    import jax
+
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    from repro.serve.mesh import EngineMesh
+
+    _soak(seed, layout, engine_extra={"mesh": EngineMesh(jax.devices())})

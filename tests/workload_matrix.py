@@ -114,11 +114,86 @@ def run_matrix_cell(layout, switching, eta, megatick, *, kinds=None,
             workloads.verify_result(res, q, lv, unreached=UNREACHED,
                                     graph=g)
     # a forced layout must actually have resolved: the cell tested what
-    # it claims to test
+    # it claims to test (a runner may be gone when per-device budgets
+    # evicted its entry post-drain, §17.3 — the surviving ones must match)
     if layout != "auto":
         for name in duo:
-            r = eng._runners[name]
+            r = eng._runners.get(name)
+            if r is None:
+                continue
             assert r.layout == layout, (layout, name, r.layout)
             if layout == "mma":
                 assert r._tiles is not None
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# §17 mesh cells: the same sweep through a device mesh
+# ---------------------------------------------------------------------------
+
+# source-parallel (replicated, kappa lanes per device) and graph-parallel
+# (row-sharded: a budget below every graph's projected bytes forces the
+# §17.2 path) on both base substrates, per-level and windowed
+MESH_LAYOUTS = ["byteplane", "packed"]
+MESH_MODES = ["source", "graph"]
+MESH_MATRIX = [(lay, mode, mt)
+               for lay in MESH_LAYOUTS
+               for mode in MESH_MODES
+               for mt in MEGATICKS]
+
+_MIN_PROJECTED = None
+
+
+def min_projected_bytes(duo=None):
+    """The smallest projected single-device artifact across the matrix
+    graphs: one byte less than this puts *every* graph over the §17.2
+    per-device budget, forcing the row-sharded build for all of them."""
+    global _MIN_PROJECTED
+    if duo is not None:
+        from repro.core import reorder as reorder_mod
+        from repro.core.bvss import BvssConfig, build_bvss
+        from repro.serve import mesh as mesh_mod
+
+        cfg = BvssConfig()
+        return min(
+            mesh_mod.projected_device_bytes(
+                build_bvss(g.permuted(
+                    reorder_mod.reorder(g, sigma=cfg.sigma).perm), cfg))
+            for g in duo.values())
+    if _MIN_PROJECTED is None:
+        _MIN_PROJECTED = min_projected_bytes(matrix_graphs())
+    return _MIN_PROJECTED
+
+
+def run_mesh_cell(layout, mode, megatick, *, devices=None, **kw):
+    """One §17 mesh matrix cell: ``run_matrix_cell`` with the engine
+    served through a device mesh — ``mode='source'`` replicates every
+    graph across the group, ``mode='graph'`` sets a per-device budget
+    below every graph's projected bytes so each builds row-sharded.
+    Switching is pinned off: sharded sessions are policy-off by design
+    (§17.2) and replicated ones must match the single-device dense
+    stream bit for bit."""
+    import jax
+
+    from repro.serve.mesh import EngineMesh
+
+    duo = kw.pop("duo", None) or matrix_graphs()
+    engine_kw = dict(kw.pop("engine_kw", None) or {})
+    engine_kw["mesh"] = EngineMesh(devices or jax.devices())
+    if mode == "graph":
+        engine_kw["device_budget"] = min_projected_bytes(duo) - 1
+    eng = run_matrix_cell(layout, "off", 10.0, megatick, duo=duo,
+                          engine_kw=engine_kw, **kw)
+    # the mode must actually have engaged for every surviving entry
+    # (per-device eviction can drop entries post-drain), and at least
+    # the most-recently-installed one always survives
+    resident = [eng.cache.peek(name) for name in duo]
+    resident = [a for a in resident if a is not None]
+    assert resident, "per-device shrink may never evict the MRU entry"
+    for art in resident:
+        if mode == "graph":
+            assert art.sharded is not None, art.name
+        else:
+            assert art.replicas is not None, art.name
+            assert len(art.replicas) == len(engine_kw["mesh"].devices)
     return eng
